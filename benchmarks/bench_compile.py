@@ -1,0 +1,36 @@
+"""Fig. 13: JIT compilation overhead — trace+compile time is
+dataset-size agnostic while compute scales, so amortization improves
+with scale (the Mojo-JIT study, XLA edition)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import measure, report
+
+
+def run(quick: bool = False):
+    import jax
+    import jax.numpy as jnp
+
+    def pipeline(keys, vals, thresh):
+        # filter + groupby-sum + normalize: a fused mini query plan
+        mask = vals > thresh
+        v = jnp.where(mask, vals, 0.0)
+        sums = jax.ops.segment_sum(v, keys, num_segments=1024)
+        return sums / jnp.maximum(sums.sum(), 1e-9)
+
+    sizes = [10_000, 100_000, 1_000_000] if quick else [10_000, 100_000, 1_000_000, 4_000_000]
+    rng = np.random.default_rng(0)
+    for n in sizes:
+        keys = jnp.asarray(rng.integers(0, 1024, n).astype(np.int32))
+        vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        jitted = jax.jit(pipeline)
+        t0 = time.perf_counter()
+        jax.block_until_ready(jitted(keys, vals, 0.1))  # trace+compile+run
+        t_first = time.perf_counter() - t0
+        t_exec = measure(lambda: jax.block_until_ready(jitted(keys, vals, 0.1)), repeats=5)
+        t_compile = max(t_first - t_exec, 0.0)
+        report(f"compile/n{n}/compile_time", t_compile, "size-agnostic")
+        report(f"compile/n{n}/exec_time", t_exec, f"compile/exec={t_compile / max(t_exec, 1e-9):.1f}x")

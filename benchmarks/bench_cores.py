@@ -1,0 +1,51 @@
+"""Fig. 8: scaling with core count — query kernels re-run in
+subprocesses pinned (sched_setaffinity) to 1/2/4/8 cores."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+from .common import report
+
+_CHILD = """
+import os, sys, time
+os.sched_setaffinity(0, set(range(int(sys.argv[1]))))
+sys.path.insert(0, "src")
+import numpy as np
+from repro.data import tpch
+from repro.queries import tpch_frames as QF
+tables = tpch.generate(sf=float(sys.argv[2]), seed=0)
+frames = tpch.as_frames(tables)
+qname = sys.argv[3]
+QF.ALL[qname](frames, sf=float(sys.argv[2]))  # warmup/compile
+best = 1e9
+for _ in range(2):
+    t0 = time.perf_counter()
+    QF.ALL[qname](frames, sf=float(sys.argv[2]))
+    best = min(best, time.perf_counter() - t0)
+print(f"RESULT {best}")
+"""
+
+
+def run(sf: float = 0.01, quick: bool = False):
+    ncpu = os.cpu_count() or 8
+    cores = [c for c in (1, 2, 4, 8) if c <= ncpu]
+    if quick:
+        cores = cores[:2]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    for qname in ("q1", "q6") if quick else ("q1", "q6", "q9"):
+        base = None
+        for c in cores:
+            out = subprocess.run(
+                [sys.executable, "-c", _CHILD, str(c), str(sf), qname],
+                capture_output=True, text=True, env=env, timeout=900,
+            )
+            line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")]
+            if not line:
+                report(f"cores/{qname}/c{c}", 0.0, f"FAILED: {out.stderr[-200:]}")
+                continue
+            t = float(line[0].split()[1])
+            base = base or t
+            report(f"cores/{qname}/c{c}", t, f"speedup_vs_1core={base / t:.2f}x")

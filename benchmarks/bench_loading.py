@@ -1,0 +1,39 @@
+"""Fig. 14: data loading — binary columnar (projection pushdown) vs CSV
+text parsing, on TPC-H partsupp's 3 needed columns (the Q2 scenario)."""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+from .common import measure, report, tpch_tables
+
+
+def run(sf: float = 0.01, quick: bool = False):
+    from repro.core import io as tio
+
+    tables = tpch_tables(sf)
+    ps = tables["partsupp"]
+    d = tempfile.mkdtemp(prefix="tfb_bench_")
+    try:
+        tfb_path = os.path.join(d, "partsupp.tfb")
+        csv_path = os.path.join(d, "partsupp.csv")
+        tio.write_tfb(tfb_path, ps)
+        tio.write_csv(csv_path, ps)
+        cols = ["ps_partkey", "ps_suppkey", "ps_supplycost"]
+
+        t_bin = measure(lambda: tio.read_tfb_arrays(tfb_path, cols))
+        report("loading/partsupp3/binary_pushdown", t_bin, f"n={ps['ps_partkey'].shape[0]}")
+        t_csv_cols = measure(lambda: tio.read_csv_arrays(csv_path, cols), repeats=1)
+        report("loading/partsupp3/csv_usecols", t_csv_cols, f"slowdown={t_csv_cols / t_bin:.1f}x")
+        t_csv_full = measure(lambda: tio.read_csv_arrays(csv_path), repeats=1)
+        report("loading/partsupp3/csv_full", t_csv_full, f"slowdown={t_csv_full / t_bin:.1f}x")
+
+        # string-heavy table: the paper's limitation case
+        orders_cols = {k: tables["orders"][k] for k in ("o_orderkey", "o_comment")}
+        tfb_o = os.path.join(d, "orders.tfb")
+        tio.write_tfb(tfb_o, orders_cols)
+        t_str = measure(lambda: tio.read_tfb_arrays(tfb_o, ["o_comment"]), repeats=2)
+        report("loading/orders_comment/binary", t_str, "string payload")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)

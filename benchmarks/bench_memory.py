@@ -1,0 +1,54 @@
+"""Tables I/II: in-memory footprint of TensorFrame representations vs
+raw on-disk CSV bytes, whole tables and per-column classes."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import report, tpch_frames, tpch_tables
+
+
+def _csv_bytes(cols: dict) -> int:
+    n = next(iter(cols.values())).shape[0]
+    total = 0
+    for arr in cols.values():
+        total += sum(len(str(v)) + 1 for v in arr[: min(n, 20000)]) * max(1, n // min(n, 20000))
+    return total
+
+
+def run(sf: float = 0.01, quick: bool = False):
+    tables = tpch_tables(sf)
+    frames = tpch_frames(sf)
+    for tname in ("partsupp", "lineitem", "orders"):
+        f = frames[tname]
+        mem = f.memory_bytes()
+        total = sum(mem.values())
+        disk = _csv_bytes(tables[tname])
+        report(
+            f"memory/{tname}/total",
+            0.0,
+            f"mem={total/1e6:.1f}MB disk_csv={disk/1e6:.1f}MB ratio={total/max(disk,1):.2f} "
+            f"(itensor={mem['itensor']/1e6:.1f} ftensor={mem['ftensor']/1e6:.1f} "
+            f"dicts={mem['dicts']/1e6:.1f} offloaded={mem['offloaded']/1e6:.1f})",
+        )
+
+    # Table II: per-column classes on lineitem
+    li = tables["lineitem"]
+    n = li["l_orderkey"].shape[0]
+    specs = {
+        "orderkey_int": ("l_orderkey", 8 * n),
+        "quantity_float": ("l_quantity", 8 * n),
+        "returnflag_lowcard": ("l_returnflag", None),
+        "comment_highcard": ("l_comment", None),
+    }
+    f = frames["lineitem"]
+    for label, (colname, tensor_bytes) in specs.items():
+        m = f.meta(colname)
+        if m.kind in ("int", "float", "date"):
+            size = 8 * n
+        elif m.kind == "dict":
+            size = 8 * n + sum(len(str(s)) + 8 for s in m.dictionary)
+        else:
+            oc = f.offloaded[colname]
+            size = sum(len(str(s)) + 20 for s in oc.values) + 8 * n
+        raw = sum(len(str(v)) for v in li[colname][: min(n, 20000)]) * max(1, n // min(n, 20000))
+        report(f"memory/lineitem/{label}", 0.0, f"mem={size/1e6:.2f}MB raw={raw/1e6:.2f}MB kind={m.kind}")

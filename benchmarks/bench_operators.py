@@ -1,0 +1,131 @@
+"""Figs. 10/11/12: per-operator ablations.
+
+- Fig 10 (string-UDF filter): row-at-a-time Python vs numpy-vectorized
+  vs TensorFrame dictionary-LUT vs device packed-byte kernel path.
+- Fig 11 (group-by key building): Python-dict-of-tuples ("PandasMojo",
+  the mutable-key pathology) vs per-column incremental (Alg. 1) vs
+  transposed packed composite (Alg. 2, ours).
+- Fig 12 (join): direct-address (factorized perfect hash) vs
+  sorted-probe vs full sort-merge.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import measure, report, tpch_frames, tpch_tables
+
+
+def _filter_udf(sf: float, quick: bool):
+    import jax
+
+    from repro.core import CONFIG, col, strings
+    from repro.core import TensorFrame
+
+    tables = tpch_tables(sf)
+    comments = tables["orders"]["o_comment"]
+    n = comments.shape[0]
+
+    # row-at-a-time python (Pandas .apply analog)
+    def row_loop():
+        out = np.empty(n, dtype=bool)
+        for i, s in enumerate(comments):
+            j = s.find("special")
+            out[i] = not (j >= 0 and s.find("requests", j + 7) >= 0)
+        return out
+
+    t_row = measure(row_loop, repeats=1, warmup=0)
+    report("operators/filter_udf/rowpython", t_row, f"n={n}")
+
+    # numpy-vectorized over unique values (dictionary trick, host)
+    frames = tpch_frames(sf)
+
+    def tf_lut():
+        return frames["orders"].filter(
+            col("o_comment").str.not_exists_before("special", "requests")
+        )
+
+    t_lut = measure(tf_lut)
+    report("operators/filter_udf/tensorframe_dictlut", t_lut, f"speedup={t_row / t_lut:.1f}x")
+
+    # device packed-bytes path (jnp reference of the Pallas kernel)
+    packed, lens = strings.pack_strings(comments, 96)
+
+    @jax.jit
+    def dev():
+        return ~strings.exists_before(packed, lens, "special", "requests")
+
+    dev()  # compile
+    t_dev = measure(lambda: jax.block_until_ready(dev()))
+    report("operators/filter_udf/device_packed", t_dev, f"speedup={t_row / t_dev:.1f}x")
+
+
+def _groupby(sf: float, quick: bool):
+    from repro.core.groupby import (
+        incremental_group_ids,
+        pydict_group_ids,
+        transposed_group_ids,
+    )
+
+    tables = tpch_tables(sf)
+    li = tables["lineitem"]
+    cols = [
+        li["l_orderkey"] % 1_000_000,
+        li["l_partkey"] % 10_000,
+        (li["l_quantity"].astype(np.int64)),
+    ]
+    n = cols[0].shape[0]
+
+    t_py = measure(lambda: pydict_group_ids(cols), repeats=1, warmup=0)
+    report("operators/groupby/pydict_tuples", t_py, f"n={n} (PandasMojo analog)")
+    t_inc = measure(lambda: incremental_group_ids(cols))
+    report("operators/groupby/incremental_alg1", t_inc, f"speedup_vs_pydict={t_py / t_inc:.1f}x")
+    t_tr = measure(lambda: transposed_group_ids(cols))
+    report(
+        "operators/groupby/transposed_alg2",
+        t_tr,
+        f"speedup_vs_pydict={t_py / t_tr:.1f}x speedup_vs_alg1={t_inc / t_tr:.1f}x",
+    )
+
+
+def _join(sf: float, quick: bool):
+    from repro.core.join import join as J
+
+    frames = tpch_frames(sf)
+    orders = frames["orders"].select(["o_orderkey", "o_custkey", "o_totalprice"])
+    cust = frames["customer"].select(["c_custkey", "c_acctbal"])
+
+    t_direct = measure(
+        lambda: J(orders, cust, left_on="o_custkey", right_on="c_custkey", algorithm="direct")
+    )
+    report("operators/join/direct_address", t_direct, f"n={orders.nrows}")
+    t_sorted = measure(
+        lambda: J(orders, cust, left_on="o_custkey", right_on="c_custkey", algorithm="sorted")
+    )
+    report("operators/join/sorted_probe", t_sorted, f"vs_direct={t_sorted / t_direct:.2f}x")
+    t_sm = measure(
+        lambda: J(orders, cust, left_on="o_custkey", right_on="c_custkey", algorithm="sortmerge")
+    )
+    report("operators/join/sort_merge", t_sm, f"vs_direct={t_sm / t_direct:.2f}x")
+
+    # row-python dict join baseline
+    tables = tpch_tables(sf)
+
+    def pyjoin():
+        idx = {}
+        for i, k in enumerate(tables["customer"]["c_custkey"]):
+            idx[k] = i
+        out = []
+        for i, k in enumerate(tables["orders"]["o_custkey"]):
+            j = idx.get(k)
+            if j is not None:
+                out.append((i, j))
+        return out
+
+    t_py = measure(pyjoin, repeats=1, warmup=0)
+    report("operators/join/rowpython_dict", t_py, f"vs_direct={t_py / t_direct:.2f}x")
+
+
+def run(sf: float = 0.01, quick: bool = False):
+    _filter_udf(sf, quick)
+    _groupby(sf if not quick else 0.005, quick)
+    _join(sf, quick)

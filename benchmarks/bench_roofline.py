@@ -1,0 +1,42 @@
+"""Roofline report: reads the dry-run JSON artifacts and prints the
+three-term table per (arch x shape x mesh) — the §Roofline deliverable."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import report
+
+ARTIFACTS = os.environ.get("DRYRUN_ARTIFACTS", "artifacts/dryrun")
+
+
+def load_cells(pattern: str = "*.json"):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(ARTIFACTS, pattern))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def run(quick: bool = False):
+    cells = load_cells()
+    if not cells:
+        report("roofline/missing", 0.0, f"no artifacts under {ARTIFACTS}; run repro.launch.dryrun --all")
+        return
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    err = [c for c in cells if c.get("status") == "error"]
+    report("roofline/cells", 0.0, f"ok={len(ok)} skipped={len(skipped)} error={len(err)}")
+    for c in ok:
+        r = c["roofline"]
+        peak = (c.get("memory") or {}).get("peak_bytes") or 0
+        derived = (
+            f"mesh={c['mesh']} kind={c['kind']} dominant={r['dominant']} "
+            f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+            f"collective={r['collective_s']:.5f}s useful={r['useful_flops_ratio'] and round(r['useful_flops_ratio'], 3)} "
+            f"peakGB={peak/2**30:.2f}"
+        )
+        report(f"roofline/{c['arch']}/{c['shape']}", 0.0, derived)
+    for c in err:
+        report(f"roofline/{c['arch']}/{c['shape']}", 0.0, f"ERROR mesh={c['mesh']}: {c['error'][:120]}")

@@ -1,0 +1,22 @@
+"""Fig. 7: query time vs dataset scale — near-linear scaling check.
+Fits log(time) ~ a*log(sf); a ≈ 1 is linear."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import measure, report, tpch_frames
+
+
+def run(quick: bool = False):
+    from repro.queries import tpch_frames as QF
+
+    sfs = [0.004, 0.008, 0.016] if quick else [0.004, 0.008, 0.016, 0.032]
+    for qname in ("q1", "q6", "q9", "q13"):
+        times = []
+        for sf in sfs:
+            frames = tpch_frames(sf)
+            t = measure(lambda: QF.ALL[qname](frames, sf=sf), repeats=2, warmup=1)
+            times.append(t)
+            report(f"scaling/{qname}/sf{sf}", t)
+        a = np.polyfit(np.log(sfs), np.log(times), 1)[0]
+        report(f"scaling/{qname}/exponent", 0.0, f"alpha={a:.2f} (1.0=linear)")

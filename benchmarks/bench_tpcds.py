@@ -1,0 +1,17 @@
+"""Fig. 9: the 5 TPC-DS queries, same engine comparison."""
+from __future__ import annotations
+
+from .common import measure, report, tpcds_frames, tpcds_tables
+
+
+def run(sf: float = 0.01, quick: bool = False):
+    tables = tpcds_tables(sf)
+    frames = tpcds_frames(sf)
+    from repro.queries import tpcds_frames as QF
+    from repro.queries import tpcds_numpy as QN
+
+    for qname in ("q3", "q6", "q7", "q42", "q96"):
+        tf = measure(lambda: QF.ALL[qname](frames, sf=sf), repeats=3 if not quick else 1)
+        tr = measure(lambda: QN.ALL[qname](tables, sf=sf), repeats=1, warmup=0)
+        report(f"tpcds/{qname}/tensorframe", tf, f"sf={sf}")
+        report(f"tpcds/{qname}/rowpython", tr, f"speedup={tr / tf:.1f}x")

@@ -1,0 +1,25 @@
+"""Fig. 6: all 22 TPC-H queries — TensorFrame vs the row-at-a-time
+Python reference (the Pandas-apply analog).  Reports per-query times
+and the row/tensor speedup ratio."""
+from __future__ import annotations
+
+from .common import measure, report, tpch_frames, tpch_tables
+
+
+def run(sf: float = 0.01, quick: bool = False, row_engine: bool = True):
+    tables = tpch_tables(sf)
+    frames = tpch_frames(sf)
+    from repro.queries import tpch_frames as QF
+    from repro.queries import tpch_numpy as QN
+
+    qnames = [f"q{i}" for i in range(1, 23)]
+    if quick:
+        qnames = ["q1", "q3", "q6", "q9", "q13", "q16", "q18"]
+    for qname in qnames:
+        tf = measure(lambda: QF.ALL[qname](frames, sf=sf), repeats=3 if not quick else 1)
+        if row_engine:
+            tr = measure(lambda: QN.ALL[qname](tables, sf=sf), repeats=1, warmup=0)
+            report(f"tpch/{qname}/tensorframe", tf, f"sf={sf}")
+            report(f"tpch/{qname}/rowpython", tr, f"speedup={tr / tf:.1f}x")
+        else:
+            report(f"tpch/{qname}/tensorframe", tf, f"sf={sf}")

@@ -1,0 +1,59 @@
+"""Shared benchmark infrastructure: timing, data caching, reporting.
+
+Output contract (benchmarks/run.py): CSV lines ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import functools
+import gc
+import time
+from typing import Callable, Dict, Optional
+
+ROWS = []
+
+
+def measure(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        gc.collect()
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def report(name: str, seconds: float, derived: str = "") -> None:
+    ROWS.append((name, seconds * 1e6, derived))
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+@functools.lru_cache(maxsize=4)
+def tpch_tables(sf: float, seed: int = 0):
+    from repro.data import tpch
+
+    return tpch.generate(sf=sf, seed=seed)
+
+
+@functools.lru_cache(maxsize=4)
+def tpch_frames(sf: float, seed: int = 0):
+    from repro.data import tpch
+
+    return tpch.as_frames(tpch_tables(sf, seed))
+
+
+@functools.lru_cache(maxsize=2)
+def tpcds_tables(sf: float, seed: int = 1):
+    from repro.data import tpcds
+
+    return tpcds.generate(sf=sf, seed=seed)
+
+
+@functools.lru_cache(maxsize=2)
+def tpcds_frames(sf: float, seed: int = 1):
+    from repro.data import tpcds
+
+    return tpcds.as_frames(tpcds_tables(sf, seed))

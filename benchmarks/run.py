@@ -1,0 +1,62 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only name,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (see common.report).
+Default is quick mode (small scale factors) so the whole suite runs in
+minutes on CPU; --full uses larger data.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    ap.add_argument("--sf", type=float, default=None)
+    args = ap.parse_args()
+    quick = not args.full
+    sf = args.sf or (0.01 if quick else 0.05)
+
+    from . import (
+        bench_compile,
+        bench_cores,
+        bench_loading,
+        bench_memory,
+        bench_operators,
+        bench_roofline,
+        bench_scaling,
+        bench_tpch,
+        bench_tpcds,
+    )
+
+    suites = {
+        "tpch": lambda: bench_tpch.run(sf=sf, quick=quick),
+        "tpcds": lambda: bench_tpcds.run(sf=sf, quick=quick),
+        "operators": lambda: bench_operators.run(sf=sf, quick=quick),
+        "scaling": lambda: bench_scaling.run(quick=quick),
+        "compile": lambda: bench_compile.run(quick=quick),
+        "loading": lambda: bench_loading.run(sf=sf, quick=quick),
+        "memory": lambda: bench_memory.run(sf=sf, quick=quick),
+        "cores": lambda: bench_cores.run(sf=sf, quick=quick),
+        "roofline": lambda: bench_roofline.run(quick=quick),
+    }
+    only = set(filter(None, args.only.split(",")))
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/SUITE_ERROR,0,{type(e).__name__}: {e}", flush=True)
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Run the full TPC-H suite on generated data and print a Fig.6-style
+relative-time table (TensorFrame vs the row-at-a-time reference).
+
+    PYTHONPATH=src python examples/tpch_analytics.py [--sf 0.01]
+"""
+import argparse
+import time
+
+from repro.data import tpch
+from repro.queries import tpch_frames as QF
+from repro.queries import tpch_numpy as QN
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.01)
+    ap.add_argument("--row-engine", action="store_true", help="also time the row-python reference")
+    args = ap.parse_args()
+
+    tables = tpch.generate(sf=args.sf, seed=0)
+    frames = tpch.as_frames(tables)
+    print(f"TPC-H sf={args.sf}: lineitem={tables['lineitem']['l_orderkey'].shape[0]} rows\n")
+    print(f"{'query':6s} {'tensorframe':>12s} {'rowpython':>12s} {'speedup':>8s}")
+    for i in range(1, 23):
+        q = f"q{i}"
+        fn = QF.ALL[q]
+        fn(frames, sf=args.sf)  # warm
+        t0 = time.perf_counter()
+        fn(frames, sf=args.sf)
+        tf = time.perf_counter() - t0
+        if args.row_engine:
+            t0 = time.perf_counter()
+            QN.ALL[q](tables, sf=args.sf)
+            tr = time.perf_counter() - t0
+            print(f"{q:6s} {tf*1e3:10.1f}ms {tr*1e3:10.1f}ms {tr/tf:7.1f}x")
+        else:
+            print(f"{q:6s} {tf*1e3:10.1f}ms {'-':>12s} {'-':>8s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Assigned-architecture configs (``--arch <id>``).
+
+Each module defines CONFIG: ModelConfig with the exact published
+hyperparameters from the assignment table.  ``registry.get(name)``
+resolves ids.
+"""
+from .registry import ARCHS, get  # noqa: F401

@@ -1,0 +1,32 @@
+"""TensorFrame — MojoFrame's design in JAX (see DESIGN.md).
+
+The relational engine requires exact 64-bit integer keys; enable x64
+*for processes that use the engine*.  Model/launch code does not import
+this package and keeps JAX defaults (explicit bf16/f32 dtypes).
+"""
+from jax import config as _jax_config
+
+_jax_config.update("jax_enable_x64", True)
+
+from .config import CONFIG, EngineConfig  # noqa: E402
+from .frame import TensorFrame, concat_rows  # noqa: E402
+from .expr import col, lit, d, if_else, udf  # noqa: E402
+from .join import join  # noqa: E402
+from .io import read_csv, read_tfb, write_csv, write_tfb  # noqa: E402
+
+__all__ = [
+    "CONFIG",
+    "EngineConfig",
+    "TensorFrame",
+    "concat_rows",
+    "col",
+    "lit",
+    "d",
+    "if_else",
+    "udf",
+    "join",
+    "read_csv",
+    "read_tfb",
+    "write_csv",
+    "write_tfb",
+]

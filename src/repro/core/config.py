@@ -1,0 +1,29 @@
+"""Engine-wide configuration for the TensorFrame relational engine.
+
+Mirrors MojoFrame's user-facing knobs (§VI-A of the paper): the
+cardinality threshold that decides dictionary-encoding vs offloading,
+plus TPU-adaptation knobs (measure dtype, device string path).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    # Columns with (n_distinct / n_rows) <= card_threshold are
+    # dictionary-encoded into the int tensor; above it they are offloaded
+    # (paper §III-c/d uses 50%).
+    card_threshold: float = 0.5
+    # Measure tensor dtype. float64 on CPU hosts for exact analytics;
+    # a TPU deployment would flip this to float32 (see DESIGN.md §2).
+    float_dtype: str = "float64"
+    # When True, string predicates on offloaded columns run on the packed
+    # (n, maxlen) uint8 device tensor (Pallas kernel on TPU, jnp ref on
+    # CPU) instead of the host dictionary-LUT path.
+    use_device_strings: bool = False
+    # Maximum packed string width for the device string path.
+    max_packed_len: int = 128
+
+
+CONFIG = EngineConfig()

@@ -1,0 +1,542 @@
+"""TensorFrame: the paper's tensor-backed dataframe, adapted to JAX.
+
+Representation (paper §III, Fig. 3), TPU-adapted per DESIGN.md §2:
+
+- ``itensor``: one 2-D int64 device tensor holding ALL integer-like
+  columns — raw ints, dates (days since epoch), bools (0/1) and the
+  dense dictionary codes of low-cardinality non-numeric columns.
+- ``ftensor``: one 2-D float device tensor holding all measures.
+- high-cardinality non-numeric columns are *offloaded*
+  (``OffloadedColumn``): the physical host array never moves; a device
+  row indexer maps logical rows to physical positions, so relational
+  ops only update the indexer (paper §III-f).
+- ``columns``: the column indexer — an ordered map from logical column
+  name to its physical (tensor, slot) location.  Logical column order is
+  decoupled from physical slot order.
+
+Null semantics: nullable columns carry a hidden companion column
+``__v__<name>`` (0/1 in the int tensor) that flows through every
+relational op like any other column.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .config import CONFIG
+from . import encoding
+
+INT = jnp.int64
+# Sentinel stored in int/code slots of null cells (the hidden validity
+# column is authoritative; the sentinel just keeps gathers in-range).
+INT_NULL = np.int64(-1)
+
+VALID_PREFIX = "__v__"
+
+
+def _valid_name(name: str) -> str:
+    return VALID_PREFIX + name
+
+
+def _is_hidden(name: str) -> bool:
+    return name.startswith(VALID_PREFIX)
+
+
+def float_dtype():
+    return jnp.dtype(CONFIG.float_dtype)
+
+
+@dataclasses.dataclass
+class ColumnMeta:
+    """Logical column → physical storage mapping (the column indexer)."""
+
+    name: str
+    kind: str  # 'int' | 'float' | 'bool' | 'date' | 'dict' | 'obj'
+    slot: int  # slot in itensor (int-like kinds) or ftensor ('float'); -1 for 'obj'
+    dictionary: Optional[np.ndarray] = None  # sorted uniques for 'dict'
+
+    def is_int_like(self) -> bool:
+        return self.kind in ("int", "bool", "date", "dict")
+
+
+class OffloadedColumn:
+    """High-cardinality non-numeric column, offloaded from the tensor.
+
+    ``values`` is the immutable physical host array; ``idx`` is a device
+    int64 row indexer (logical row -> physical position).  Factorized
+    codes and packed byte tensors are cached on the *physical* array so
+    filtered/joined views share them.
+    """
+
+    def __init__(self, values: np.ndarray, idx: Optional[jax.Array] = None,
+                 _cache: Optional[dict] = None):
+        self.values = values
+        if idx is None:
+            idx = jnp.arange(values.shape[0], dtype=INT)
+        self.idx = idx
+        # cache shared across views of the same physical array
+        self._cache = _cache if _cache is not None else {}
+
+    @property
+    def nrows(self) -> int:
+        return int(self.idx.shape[0])
+
+    def take(self, rows: jax.Array) -> "OffloadedColumn":
+        return OffloadedColumn(self.values, self.idx[rows], self._cache)
+
+    def materialize(self) -> np.ndarray:
+        return self.values[np.asarray(self.idx)]
+
+    def phys_factorize(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(codes over physical rows, sorted dictionary), cached."""
+        if "fact" not in self._cache:
+            self._cache["fact"] = encoding.factorize(self.values)
+        return self._cache["fact"]
+
+    def codes(self) -> Tuple[jax.Array, np.ndarray]:
+        """Dense codes aligned with *logical* rows + dictionary."""
+        phys_codes, dictionary = self.phys_factorize()
+        if "dev_codes" not in self._cache:
+            self._cache["dev_codes"] = jnp.asarray(phys_codes, dtype=INT)
+        return self._cache["dev_codes"][self.idx], dictionary
+
+    def packed(self, max_len: Optional[int] = None):
+        """Packed (n_phys, L) uint8 byte tensor + lengths, cached."""
+        from . import strings  # local import to avoid cycle
+
+        key = ("packed", max_len)
+        if key not in self._cache:
+            self._cache[key] = strings.pack_strings(self.values, max_len)
+        return self._cache[key]
+
+
+def _empty_tensor(n: int, dtype) -> jax.Array:
+    return jnp.zeros((n, 0), dtype=dtype)
+
+
+class TensorFrame:
+    def __init__(
+        self,
+        itensor: jax.Array,
+        ftensor: jax.Array,
+        columns: Dict[str, ColumnMeta],
+        offloaded: Dict[str, OffloadedColumn],
+        nrows: int,
+    ):
+        self.itensor = itensor
+        self.ftensor = ftensor
+        self.columns = columns
+        self.offloaded = offloaded
+        self.nrows = int(nrows)
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_arrays(
+        data: Dict[str, np.ndarray],
+        *,
+        card_threshold: Optional[float] = None,
+        encode: Optional[Dict[str, str]] = None,
+    ) -> "TensorFrame":
+        """Build a frame from host numpy arrays.
+
+        ``encode`` optionally forces 'dict' or 'obj' per column name,
+        overriding the cardinality policy (paper lets users set the
+        threshold; default 50%).
+        """
+        threshold = CONFIG.card_threshold if card_threshold is None else card_threshold
+        encode = encode or {}
+        int_cols: List[Tuple[str, np.ndarray, str, Optional[np.ndarray]]] = []
+        float_cols: List[Tuple[str, np.ndarray]] = []
+        offloaded: Dict[str, OffloadedColumn] = {}
+        order: List[str] = []
+        n = None
+        for name, arr in data.items():
+            arr = np.asarray(arr)
+            if n is None:
+                n = arr.shape[0]
+            elif arr.shape[0] != n:
+                raise ValueError(f"column {name}: length {arr.shape[0]} != {n}")
+            order.append(name)
+            if np.issubdtype(arr.dtype, np.datetime64):
+                days = arr.astype("datetime64[D]").astype(np.int64)
+                int_cols.append((name, days, "date", None))
+            elif arr.dtype == np.bool_:
+                int_cols.append((name, arr.astype(np.int64), "bool", None))
+            elif np.issubdtype(arr.dtype, np.integer):
+                int_cols.append((name, arr.astype(np.int64), "int", None))
+            elif np.issubdtype(arr.dtype, np.floating):
+                float_cols.append((name, arr))
+            elif encoding.is_string_like(arr):
+                forced = encode.get(name)
+                if forced == "obj":
+                    offloaded[name] = OffloadedColumn(arr)
+                    continue
+                codes, dictionary = encoding.factorize(arr)
+                if forced == "dict" or dictionary.shape[0] <= threshold * max(1, n):
+                    int_cols.append((name, codes, "dict", dictionary))
+                else:
+                    offloaded[name] = OffloadedColumn(arr)
+            else:
+                raise TypeError(f"column {name}: unsupported dtype {arr.dtype}")
+        n = 0 if n is None else n
+
+        columns: Dict[str, ColumnMeta] = {}
+        islots: Dict[str, int] = {}
+        fslots: Dict[str, int] = {}
+        for i, (name, _, _, _) in enumerate(int_cols):
+            islots[name] = i
+        for i, (name, _) in enumerate(float_cols):
+            fslots[name] = i
+        itensor = (
+            jnp.asarray(np.column_stack([c[1] for c in int_cols]).astype(np.int64))
+            if int_cols
+            else _empty_tensor(n, INT)
+        )
+        ftensor = (
+            jnp.asarray(
+                np.column_stack([c[1] for c in float_cols]).astype(
+                    np.dtype(CONFIG.float_dtype)
+                )
+            )
+            if float_cols
+            else _empty_tensor(n, float_dtype())
+        )
+        imeta = {name: (kind, dic) for name, _, kind, dic in int_cols}
+        for name in order:
+            if name in islots:
+                kind, dic = imeta[name]
+                columns[name] = ColumnMeta(name, kind, islots[name], dic)
+            elif name in fslots:
+                columns[name] = ColumnMeta(name, "float", fslots[name])
+            else:
+                columns[name] = ColumnMeta(name, "obj", -1)
+        return TensorFrame(itensor, ftensor, columns, offloaded, n)
+
+    # ------------------------------------------------------------------
+    # basic introspection
+    # ------------------------------------------------------------------
+    @property
+    def column_names(self) -> List[str]:
+        return [c for c in self.columns if not _is_hidden(c)]
+
+    def meta(self, name: str) -> ColumnMeta:
+        try:
+            return self.columns[name]
+        except KeyError:
+            raise KeyError(f"no column {name!r}; have {self.column_names}") from None
+
+    def has_column(self, name: str) -> bool:
+        return name in self.columns
+
+    def has_nulls(self, name: str) -> bool:
+        return _valid_name(name) in self.columns
+
+    def valid_array(self, name: str) -> Optional[jax.Array]:
+        vn = _valid_name(name)
+        if vn in self.columns:
+            return self.itensor[:, self.columns[vn].slot] != 0
+        return None
+
+    # ------------------------------------------------------------------
+    # column access
+    # ------------------------------------------------------------------
+    def col_values(self, name: str) -> jax.Array:
+        """Device numeric representation (codes for dict columns)."""
+        m = self.meta(name)
+        if m.kind == "obj":
+            codes, _ = self.offloaded[name].codes()
+            return codes
+        if m.kind == "float":
+            return self.ftensor[:, m.slot]
+        return self.itensor[:, m.slot]
+
+    def col_codes(self, name: str) -> Tuple[jax.Array, np.ndarray]:
+        """(codes, dictionary) for any string-typed column."""
+        m = self.meta(name)
+        if m.kind == "dict":
+            return self.itensor[:, m.slot], m.dictionary
+        if m.kind == "obj":
+            return self.offloaded[name].codes()
+        raise TypeError(f"column {name} is not string-typed (kind={m.kind})")
+
+    def column(self, name: str) -> np.ndarray:
+        """Decode a column back to host numpy (for users/tests)."""
+        m = self.meta(name)
+        valid = self.valid_array(name)
+        if m.kind == "obj":
+            out = self.offloaded[name].materialize()
+            if valid is not None:
+                out = out.astype(object)
+                out[~np.asarray(valid)] = None
+            return out
+        if m.kind == "float":
+            out = np.asarray(self.ftensor[:, m.slot])
+            if valid is not None:
+                out = out.copy()
+                out[~np.asarray(valid)] = np.nan
+            return out
+        raw = np.asarray(self.itensor[:, m.slot])
+        if m.kind == "dict":
+            safe = np.clip(raw, 0, max(0, m.dictionary.shape[0] - 1))
+            out = m.dictionary[safe].astype(object)
+            if valid is not None:
+                out[~np.asarray(valid)] = None
+            elif (raw < 0).any():
+                out[raw < 0] = None
+            return out
+        if m.kind == "date":
+            out = raw.astype("datetime64[D]")
+            return out
+        if m.kind == "bool":
+            return raw != 0
+        return raw
+
+    def to_dict(self) -> Dict[str, np.ndarray]:
+        return {name: self.column(name) for name in self.column_names}
+
+    def __len__(self) -> int:
+        return self.nrows
+
+    # ------------------------------------------------------------------
+    # row ops
+    # ------------------------------------------------------------------
+    def take(self, rows: Union[jax.Array, np.ndarray]) -> "TensorFrame":
+        rows = jnp.asarray(rows, dtype=INT)
+        it = self.itensor[rows] if self.itensor.shape[1] else _empty_tensor(rows.shape[0], INT)
+        ft = (
+            self.ftensor[rows]
+            if self.ftensor.shape[1]
+            else _empty_tensor(rows.shape[0], float_dtype())
+        )
+        off = {k: v.take(rows) for k, v in self.offloaded.items()}
+        return TensorFrame(it, ft, dict(self.columns), off, int(rows.shape[0]))
+
+    def head(self, n: int) -> "TensorFrame":
+        n = min(n, self.nrows)
+        return self.take(jnp.arange(n, dtype=INT))
+
+    def mask_rows(self, mask: jax.Array) -> "TensorFrame":
+        """Compact rows where mask is True (eager: host-syncs the count)."""
+        mask = jnp.asarray(mask)
+        count = int(mask.sum())
+        idx = jnp.nonzero(mask, size=count)[0].astype(INT)
+        return self.take(idx)
+
+    def filter(self, expr) -> "TensorFrame":
+        from .expr import Expr
+
+        if isinstance(expr, Expr):
+            mask = expr.eval_bool(self)
+        else:
+            mask = jnp.asarray(expr)
+        return self.mask_rows(mask)
+
+    # ------------------------------------------------------------------
+    # column ops
+    # ------------------------------------------------------------------
+    def select(self, names: Sequence[str]) -> "TensorFrame":
+        cols: Dict[str, ColumnMeta] = {}
+        off: Dict[str, OffloadedColumn] = {}
+        for name in names:
+            m = self.meta(name)
+            cols[name] = m
+            if m.kind == "obj":
+                off[name] = self.offloaded[name]
+            vn = _valid_name(name)
+            if vn in self.columns:
+                cols[vn] = self.columns[vn]
+        return TensorFrame(self.itensor, self.ftensor, cols, off, self.nrows)
+
+    def drop(self, names: Sequence[str]) -> "TensorFrame":
+        keep = [c for c in self.column_names if c not in set(names)]
+        return self.select(keep)
+
+    def rename(self, mapping: Dict[str, str]) -> "TensorFrame":
+        cols: Dict[str, ColumnMeta] = {}
+        off: Dict[str, OffloadedColumn] = {}
+        for name, m in self.columns.items():
+            if _is_hidden(name):
+                base = name[len(VALID_PREFIX):]
+                new = _valid_name(mapping.get(base, base))
+            else:
+                new = mapping.get(name, name)
+            cols[new] = dataclasses.replace(m, name=new)
+            if m.kind == "obj":
+                off[new] = self.offloaded[name]
+        return TensorFrame(self.itensor, self.ftensor, cols, off, self.nrows)
+
+    def _append_int_column(
+        self,
+        name: str,
+        values: jax.Array,
+        kind: str = "int",
+        dictionary: Optional[np.ndarray] = None,
+    ) -> "TensorFrame":
+        values = jnp.asarray(values, dtype=INT).reshape(self.nrows, 1)
+        it = jnp.concatenate([self.itensor, values], axis=1)
+        cols = dict(self.columns)
+        cols.pop(name, None)
+        cols[name] = ColumnMeta(name, kind, self.itensor.shape[1], dictionary)
+        off = dict(self.offloaded)
+        off.pop(name, None)
+        return TensorFrame(it, self.ftensor, cols, off, self.nrows)
+
+    def _append_float_column(self, name: str, values: jax.Array) -> "TensorFrame":
+        values = jnp.asarray(values, dtype=float_dtype()).reshape(self.nrows, 1)
+        ft = jnp.concatenate([self.ftensor, values], axis=1)
+        cols = dict(self.columns)
+        cols.pop(name, None)
+        cols[name] = ColumnMeta(name, "float", self.ftensor.shape[1])
+        off = dict(self.offloaded)
+        off.pop(name, None)
+        return TensorFrame(self.itensor, ft, cols, off, self.nrows)
+
+    def _append_offloaded(self, name: str, col: OffloadedColumn) -> "TensorFrame":
+        cols = dict(self.columns)
+        cols[name] = ColumnMeta(name, "obj", -1)
+        off = dict(self.offloaded)
+        off[name] = col
+        return TensorFrame(self.itensor, self.ftensor, cols, off, self.nrows)
+
+    def with_column(self, name: str, expr) -> "TensorFrame":
+        from .expr import Expr, Value
+
+        if isinstance(expr, Expr):
+            val = expr.eval(self)
+        elif isinstance(expr, Value):
+            val = expr
+        else:  # raw array
+            arr = jnp.asarray(expr)
+            if jnp.issubdtype(arr.dtype, jnp.floating):
+                return self._append_float_column(name, arr)
+            return self._append_int_column(name, arr)
+        if val.kind == "str":
+            return self._append_int_column(name, val.arr, "dict", val.dictionary)
+        if val.kind == "bool":
+            return self._append_int_column(name, val.arr.astype(INT), "bool")
+        if val.kind == "date":
+            return self._append_int_column(name, val.arr, "date")
+        arr = val.arr
+        if jnp.issubdtype(arr.dtype, jnp.floating):
+            out = self._append_float_column(name, arr)
+        else:
+            out = self._append_int_column(name, arr)
+        if val.valid is not None:
+            out = out._append_int_column(_valid_name(name), val.valid.astype(INT), "bool")
+        return out
+
+    # ------------------------------------------------------------------
+    # relational ops (implemented in sibling modules)
+    # ------------------------------------------------------------------
+    def groupby(self, keys: Union[str, Sequence[str]]):
+        from .groupby import GroupBy
+
+        if isinstance(keys, str):
+            keys = [keys]
+        return GroupBy(self, list(keys))
+
+    def agg(self, specs) -> Dict[str, float]:
+        from .agg import frame_agg
+
+        return frame_agg(self, specs)
+
+    def sort_values(self, by, ascending=True) -> "TensorFrame":
+        from .sort import sort_values
+
+        return sort_values(self, by, ascending)
+
+    def join(self, other: "TensorFrame", **kwargs) -> "TensorFrame":
+        from .join import join
+
+        return join(self, other, **kwargs)
+
+    def nunique(self, name: str) -> int:
+        from .groupby import nunique_column
+
+        return nunique_column(self, name)
+
+    def unique_rows(self, names: Sequence[str]) -> "TensorFrame":
+        from .groupby import unique_rows
+
+        return unique_rows(self, list(names))
+
+    def scalar(self, name: str):
+        arr = self.column(name)
+        if arr.shape[0] != 1:
+            raise ValueError(f"scalar() on column with {arr.shape[0]} rows")
+        return arr[0]
+
+    # ------------------------------------------------------------------
+    # memory accounting (paper §VI-H)
+    # ------------------------------------------------------------------
+    def memory_bytes(self) -> Dict[str, int]:
+        dict_bytes = 0
+        for m in self.columns.values():
+            if m.kind == "dict" and m.dictionary is not None:
+                dict_bytes += sum(len(str(s).encode()) + 8 for s in m.dictionary)
+        offload_bytes = 0
+        for oc in self.offloaded.values():
+            # physical payload + per-string overhead (Mojo strings carry
+            # ~20B of metadata per the paper; we report our own measured
+            # layout in the benchmark, this is the payload estimate)
+            offload_bytes += sum(len(str(s).encode()) + 20 for s in oc.values)
+            offload_bytes += oc.idx.size * 8
+        return {
+            "itensor": int(np.prod(self.itensor.shape)) * self.itensor.dtype.itemsize,
+            "ftensor": int(np.prod(self.ftensor.shape)) * self.ftensor.dtype.itemsize,
+            "dicts": dict_bytes,
+            "offloaded": offload_bytes,
+        }
+
+    def total_bytes(self) -> int:
+        return sum(self.memory_bytes().values())
+
+    # ------------------------------------------------------------------
+    def __repr__(self) -> str:
+        cols = ", ".join(
+            f"{name}:{self.columns[name].kind}" for name in self.column_names
+        )
+        return f"TensorFrame({self.nrows} rows; {cols})"
+
+    def show(self, n: int = 8) -> str:
+        names = self.column_names
+        data = {name: self.column(name)[: min(n, self.nrows)] for name in names}
+        widths = {
+            name: max(len(name), *(len(str(v)) for v in data[name])) if self.nrows else len(name)
+            for name in names
+        }
+        lines = [" | ".join(name.ljust(widths[name]) for name in names)]
+        lines.append("-+-".join("-" * widths[name] for name in names))
+        for i in range(min(n, self.nrows)):
+            lines.append(
+                " | ".join(str(data[name][i]).ljust(widths[name]) for name in names)
+            )
+        if self.nrows > n:
+            lines.append(f"... ({self.nrows} rows)")
+        return "\n".join(lines)
+
+
+def concat_rows(frames: Sequence[TensorFrame]) -> TensorFrame:
+    """Vertical concatenation (schemas must match by name & kind)."""
+    if not frames:
+        raise ValueError("concat of zero frames")
+    base = frames[0]
+    names = list(base.columns.keys())
+    for f in frames[1:]:
+        if list(f.columns.keys()) != names:
+            raise ValueError("concat: schema mismatch")
+    import numpy as _np
+
+    data: Dict[str, np.ndarray] = {}
+    # Decode through host; concat is rare in the workloads (correctness
+    # over speed here).
+    for name in base.column_names:
+        data[name] = _np.concatenate([f.column(name) for f in frames])
+    return TensorFrame.from_arrays(data)

@@ -1,0 +1,163 @@
+"""Data loading (paper §V-b, §VI-G).
+
+Two loaders:
+
+- **Binary columnar ("tfb")**: the paper's custom binary adaptor —
+  little-endian packed column files + a JSON manifest, with projection
+  pushdown (load only requested columns).  String columns are stored as
+  dictionary + codes when encoded, else as a packed utf-8 payload with
+  offsets (the Arrow-largestring-style layout the paper wished Mojo
+  had).
+- **CSV**: the deliberately text-bound baseline.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .frame import TensorFrame
+
+MAGIC = "tfb-v1"
+
+
+def write_tfb(path: str, data: Dict[str, np.ndarray]) -> None:
+    """Write a dict of host arrays as a binary columnar table."""
+    os.makedirs(path, exist_ok=True)
+    manifest = {"magic": MAGIC, "columns": []}
+    n = None
+    for name, arr in data.items():
+        arr = np.asarray(arr)
+        n = arr.shape[0] if n is None else n
+        entry = {"name": name, "n": int(arr.shape[0])}
+        base = os.path.join(path, name)
+        if np.issubdtype(arr.dtype, np.datetime64):
+            days = arr.astype("datetime64[D]").astype(np.int64)
+            days.tofile(base + ".i64")
+            entry["type"] = "date"
+        elif np.issubdtype(arr.dtype, np.integer):
+            arr.astype(np.int64).tofile(base + ".i64")
+            entry["type"] = "int"
+        elif np.issubdtype(arr.dtype, np.floating):
+            arr.astype(np.float64).tofile(base + ".f64")
+            entry["type"] = "float"
+        else:
+            payload = "\x00".join(str(s) for s in arr).encode("utf-8")
+            offs = np.zeros(arr.shape[0] + 1, dtype=np.int64)
+            lengths = np.array([len(str(s).encode("utf-8")) for s in arr], dtype=np.int64)
+            offs[1:] = np.cumsum(lengths + 1)
+            with open(base + ".str", "wb") as f:
+                f.write(payload)
+            offs.tofile(base + ".off")
+            entry["type"] = "str"
+        manifest["columns"].append(entry)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def read_tfb_arrays(
+    path: str, columns: Optional[Sequence[str]] = None
+) -> Dict[str, np.ndarray]:
+    """Projection-pushdown read of raw host arrays."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    want = set(columns) if columns is not None else None
+    out: Dict[str, np.ndarray] = {}
+    order = columns if columns is not None else [c["name"] for c in manifest["columns"]]
+    entries = {c["name"]: c for c in manifest["columns"]}
+    for name in order:
+        if want is not None and name not in want:
+            continue
+        e = entries[name]
+        base = os.path.join(path, name)
+        if e["type"] in ("int",):
+            out[name] = np.fromfile(base + ".i64", dtype=np.int64)
+        elif e["type"] == "date":
+            out[name] = np.fromfile(base + ".i64", dtype=np.int64).astype("datetime64[D]")
+        elif e["type"] == "float":
+            out[name] = np.fromfile(base + ".f64", dtype=np.float64)
+        else:
+            offs = np.fromfile(base + ".off", dtype=np.int64)
+            with open(base + ".str", "rb") as f:
+                payload = f.read()
+            # byte offsets delimit NUL-separated utf-8 entries
+            out[name] = np.array(
+                [
+                    payload[offs[i]: offs[i + 1] - 1].decode("utf-8")
+                    for i in range(len(offs) - 1)
+                ],
+                dtype=object,
+            )
+    return out
+
+
+def read_tfb(
+    path: str,
+    columns: Optional[Sequence[str]] = None,
+    **frame_kwargs,
+) -> TensorFrame:
+    return TensorFrame.from_arrays(read_tfb_arrays(path, columns), **frame_kwargs)
+
+
+# ----------------------------------------------------------------------
+# CSV baseline
+# ----------------------------------------------------------------------
+def write_csv(path: str, data: Dict[str, np.ndarray], sep: str = "|") -> None:
+    names = list(data.keys())
+    cols = [data[n] for n in names]
+    n = cols[0].shape[0]
+    with open(path, "w") as f:
+        f.write(sep.join(names) + "\n")
+        for i in range(n):
+            f.write(sep.join(str(c[i]) for c in cols) + "\n")
+
+
+def read_csv_arrays(
+    path: str,
+    columns: Optional[Sequence[str]] = None,
+    sep: str = "|",
+    dtypes: Optional[Dict[str, str]] = None,
+) -> Dict[str, np.ndarray]:
+    """Text-parsing CSV loader (the runtime-parsing baseline)."""
+    with open(path) as f:
+        header = f.readline().rstrip("\n").split(sep)
+        rows = [line.rstrip("\n").split(sep) for line in f]
+    idx = {name: i for i, name in enumerate(header)}
+    want = list(columns) if columns is not None else header
+    out: Dict[str, np.ndarray] = {}
+    for name in want:
+        j = idx[name]
+        raw = [r[j] for r in rows]
+        hint = (dtypes or {}).get(name)
+        out[name] = _infer_column(raw, hint)
+    return out
+
+
+def _infer_column(raw: List[str], hint: Optional[str]) -> np.ndarray:
+    if hint == "int":
+        return np.array([int(x) for x in raw], dtype=np.int64)
+    if hint == "float":
+        return np.array([float(x) for x in raw], dtype=np.float64)
+    if hint == "date":
+        return np.array(raw, dtype="datetime64[D]")
+    if hint == "str":
+        return np.array(raw, dtype=object)
+    # inference
+    try:
+        return np.array([int(x) for x in raw], dtype=np.int64)
+    except ValueError:
+        pass
+    try:
+        return np.array([float(x) for x in raw], dtype=np.float64)
+    except ValueError:
+        pass
+    try:
+        return np.array(raw, dtype="datetime64[D]")
+    except ValueError:
+        return np.array(raw, dtype=object)
+
+
+def read_csv(path: str, columns=None, sep: str = "|", dtypes=None, **frame_kwargs) -> TensorFrame:
+    return TensorFrame.from_arrays(read_csv_arrays(path, columns, sep, dtypes), **frame_kwargs)

@@ -1,0 +1,46 @@
+"""Multi-key sort.
+
+Dictionary codes are order-isomorphic to string order (sorted
+dictionaries — encoding.py), so sorting by a string column is an
+integer sort on its codes: cardinality-awareness pays again.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .frame import INT, TensorFrame
+
+
+def _sort_key(frame: TensorFrame, name: str) -> jax.Array:
+    m = frame.meta(name)
+    if m.kind == "float":
+        return frame.ftensor[:, m.slot]
+    if m.kind == "obj":
+        codes, _ = frame.offloaded[name].codes()
+        return codes
+    return frame.itensor[:, m.slot]
+
+
+def sort_values(
+    frame: TensorFrame,
+    by: Union[str, Sequence[str]],
+    ascending: Union[bool, Sequence[bool]] = True,
+) -> TensorFrame:
+    by = [by] if isinstance(by, str) else list(by)
+    if isinstance(ascending, bool):
+        ascending = [ascending] * len(by)
+    if len(ascending) != len(by):
+        raise ValueError("ascending must match by")
+    keys = []
+    for name, asc in zip(by, ascending):
+        k = _sort_key(frame, name)
+        if not asc:
+            k = -k
+        keys.append(k)
+    # lexsort: last key is primary -> reverse our by-list
+    order = jnp.lexsort(tuple(reversed(keys))).astype(INT)
+    return frame.take(order)

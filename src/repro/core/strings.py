@@ -1,0 +1,184 @@
+"""Device-side string operations on packed byte tensors.
+
+MojoFrame's headline result (TPC-H Q13, §VI-E) is a *stateless* string
+UDF (``not_string_exists_before``) compiled and parallelized instead of
+applied row-by-row.  The TPU adaptation packs a string column into an
+``(n, L) uint8`` tensor + lengths and evaluates substring searches as
+vectorized sliding-window byte comparisons.  These jnp implementations
+are also the oracles for the Pallas kernels in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .config import CONFIG
+
+
+def pack_strings(
+    values: np.ndarray, max_len: Optional[int] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Pack a host string array into ((n, L) uint8, (n,) int32 lengths).
+
+    Vectorized via numpy's fixed-width bytes dtype (ASCII fast path);
+    non-ASCII data falls back to a per-string loop."""
+    n = values.shape[0]
+    cap = max_len or CONFIG.max_packed_len
+    if n == 0:
+        return jnp.zeros((0, 1), jnp.uint8), jnp.zeros((0,), jnp.int32)
+    try:
+        as_s = np.asarray(values).astype("S")  # null-padded fixed width
+        W = as_s.dtype.itemsize or 1
+        L = min(cap, W) if max_len is None else cap
+        buf = np.frombuffer(as_s.tobytes(), dtype=np.uint8).reshape(n, W)
+        lens = np.char.str_len(as_s).astype(np.int32)
+        if W < L:
+            buf = np.pad(buf, ((0, 0), (0, L - W)))
+        else:
+            buf = buf[:, :L]
+        lens = np.minimum(lens, L)
+        return jnp.asarray(np.ascontiguousarray(buf)), jnp.asarray(lens)
+    except UnicodeEncodeError:
+        pass
+    encoded = [str(s).encode("utf-8") for s in values]
+    actual = max((len(b) for b in encoded), default=1)
+    L = min(cap, max(1, actual)) if max_len is None else cap
+    buf = np.zeros((n, L), dtype=np.uint8)
+    lens = np.zeros((n,), dtype=np.int32)
+    for i, b in enumerate(encoded):
+        b = b[:L]
+        buf[i, : len(b)] = np.frombuffer(b, dtype=np.uint8)
+        lens[i] = len(b)
+    return jnp.asarray(buf), jnp.asarray(lens)
+
+
+_PACK_CACHE: dict = {}
+
+
+def pack_strings_cached(values: np.ndarray, max_len: Optional[int] = None):
+    """Cached packing keyed on the array object (dictionaries are
+    stable objects held by their frames)."""
+    key = (id(values), max_len)
+    hit = _PACK_CACHE.get(key)
+    if hit is not None and hit[0] is values:
+        return hit[1]
+    packed = pack_strings(values, max_len)
+    _PACK_CACHE[key] = (values, packed)  # keep a ref so id stays valid
+    if len(_PACK_CACHE) > 256:
+        _PACK_CACHE.pop(next(iter(_PACK_CACHE)))
+    return packed
+
+
+def _pat_array(pat: str) -> np.ndarray:
+    b = pat.encode("utf-8")
+    return np.frombuffer(b, dtype=np.uint8)
+
+
+def find_first(packed: jax.Array, lens: jax.Array, pat: str,
+               start: Optional[jax.Array] = None) -> jax.Array:
+    """Per-row index of first occurrence of ``pat`` at or after ``start``
+    (elementwise), or -1.  Pure-jnp sliding window."""
+    p = _pat_array(pat)
+    m = int(p.shape[0])
+    n, L = packed.shape
+    if m == 0:
+        return jnp.zeros((n,), dtype=jnp.int32)
+    if m > L:
+        return jnp.full((n,), -1, dtype=jnp.int32)
+    npos = L - m + 1
+    # match[i, j] = all(packed[i, j + k] == p[k] for k)
+    match = jnp.ones((n, npos), dtype=bool)
+    for k in range(m):
+        match = match & (packed[:, k : k + npos] == p[k])
+    pos = jnp.arange(npos, dtype=jnp.int32)[None, :]
+    ok = match & (pos + m <= lens[:, None].astype(jnp.int32))
+    if start is not None:
+        ok = ok & (pos >= start[:, None].astype(jnp.int32))
+    any_match = ok.any(axis=1)
+    first = jnp.argmax(ok, axis=1).astype(jnp.int32)
+    return jnp.where(any_match, first, jnp.int32(-1))
+
+
+def contains(packed: jax.Array, lens: jax.Array, pat: str) -> jax.Array:
+    return find_first(packed, lens, pat) >= 0
+
+
+def startswith(packed: jax.Array, lens: jax.Array, pat: str) -> jax.Array:
+    p = _pat_array(pat)
+    m = int(p.shape[0])
+    n, L = packed.shape
+    if m == 0:
+        return jnp.ones((n,), dtype=bool)
+    if m > L:
+        return jnp.zeros((n,), dtype=bool)
+    ok = lens >= m
+    for k in range(m):
+        ok = ok & (packed[:, k] == p[k])
+    return ok
+
+
+def endswith(packed: jax.Array, lens: jax.Array, pat: str) -> jax.Array:
+    p = _pat_array(pat)
+    m = int(p.shape[0])
+    n, L = packed.shape
+    if m == 0:
+        return jnp.ones((n,), dtype=bool)
+    start = lens.astype(jnp.int32) - m
+    ok = start >= 0
+    rows = jnp.arange(n)
+    for k in range(m):
+        idx = jnp.clip(start + k, 0, L - 1)
+        ok = ok & (packed[rows, idx] == p[k])
+    return ok
+
+
+def exists_before(packed: jax.Array, lens: jax.Array, first: str, second: str) -> jax.Array:
+    """True where ``first`` occurs and ``second`` occurs after it.
+
+    The paper's ``not_string_exists_before`` (Q13/Q16) is the negation.
+    """
+    f = find_first(packed, lens, first)
+    m = len(first.encode("utf-8"))
+    s = find_first(packed, lens, second, start=jnp.where(f >= 0, f + m, 0))
+    return (f >= 0) & (s >= 0)
+
+
+def like(packed: jax.Array, lens: jax.Array, pattern: str) -> jax.Array:
+    """SQL LIKE with ``%`` wildcards (the only wildcard in our workloads).
+
+    Translates to anchored/ordered substring search: parts between ``%``
+    must occur in order, the first/last parts anchor when the pattern
+    does not start/end with ``%``.
+    """
+    parts = pattern.split("%")
+    anchored_start = parts[0] != ""
+    anchored_end = parts[-1] != ""
+    inner = [p for p in parts if p != ""]
+    n = packed.shape[0]
+    ok = jnp.ones((n,), dtype=bool)
+    pos = jnp.zeros((n,), dtype=jnp.int32)
+    for i, part in enumerate(inner):
+        m = len(part.encode("utf-8"))
+        if i == 0 and anchored_start:
+            ok = ok & startswith(packed, lens, part)
+            pos = jnp.where(ok, m, pos)
+            continue
+        f = find_first(packed, lens, part, start=pos)
+        ok = ok & (f >= 0)
+        pos = jnp.where(f >= 0, f + m, pos)
+    if anchored_end and inner:
+        last = inner[-1]
+        m = len(last.encode("utf-8"))
+        if len(inner) == 1 and anchored_start:
+            # pattern like 'abc' (no %): exact match
+            ok = ok & (lens == m)
+        else:
+            ends = endswith(packed, lens, last)
+            if len(inner) >= 2 or not anchored_start:
+                # the last part must also be the trailing match; re-check
+                # that an occurrence ends exactly at len
+                ok = ok & ends
+    return ok

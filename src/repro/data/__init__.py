@@ -1,0 +1,2 @@
+"""Data generation and pipelines: TPC-H/TPC-DS mini-dbgen + the LM
+token pipeline that uses TensorFrame as its relational layer."""

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+- hash32x2: two-lane 32-bit tuple hashing (distributed repartitioning)
+- substr_find / exists_before: packed-byte string UDFs (TPC-H Q13)
+- segment_reduce: MXU-friendly sorted segmented sum (group-by)
+- flash_attention: causal GQA online-softmax attention (prefill/train)
+- wkv6: RWKV6 data-dependent-decay recurrence (rwkv6-7b)
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` is the
+jit'd public API with backend dispatch (native on TPU, interpret mode
+elsewhere).
+"""
+from . import ops, ref  # noqa: F401

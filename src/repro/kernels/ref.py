@@ -1,0 +1,139 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Self-contained (no repro.core import — kernels must not flip the x64
+flag).  Each function is the semantic ground truth the kernel tests
+assert against.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------------
+# hash32x2: two-lane murmur-style tuple hash over k integer columns
+# ----------------------------------------------------------------------
+_M1 = np.uint32(0x85EBCA6B)
+_M2 = np.uint32(0xC2B2AE35)
+_SEEDS = (np.uint32(0x9E3779B9), np.uint32(0x7F4A7C15))
+
+
+def fmix32(h: jax.Array) -> jax.Array:
+    h = h ^ (h >> np.uint32(16))
+    h = h * _M1
+    h = h ^ (h >> np.uint32(13))
+    h = h * _M2
+    h = h ^ (h >> np.uint32(16))
+    return h
+
+
+def hash32x2(cols: jax.Array) -> jax.Array:
+    """cols: (n, k) int32/uint32 -> (n, 2) uint32 tuple hashes."""
+    cols = cols.astype(jnp.uint32)
+    n, k = cols.shape
+    out = []
+    for seed in _SEEDS:
+        h = jnp.full((n,), seed, dtype=jnp.uint32)
+        for j in range(k):
+            h = fmix32(h ^ fmix32(cols[:, j] + np.uint32(j + 1)))
+        out.append(h)
+    return jnp.stack(out, axis=1)
+
+
+# ----------------------------------------------------------------------
+# substr_find: first occurrence of a byte pattern per row
+# ----------------------------------------------------------------------
+def substr_find(
+    packed: jax.Array,
+    lens: jax.Array,
+    pattern: jax.Array,
+    start: Optional[jax.Array] = None,
+) -> jax.Array:
+    """packed (n, L) uint8, pattern (m,) uint8 -> (n,) int32 index|-1."""
+    n, L = packed.shape
+    m = int(pattern.shape[0])
+    if m == 0:
+        return jnp.zeros((n,), dtype=jnp.int32)
+    if m > L:
+        return jnp.full((n,), -1, dtype=jnp.int32)
+    npos = L - m + 1
+    match = jnp.ones((n, npos), dtype=bool)
+    for j in range(m):
+        match = match & (packed[:, j : j + npos] == pattern[j])
+    pos = jnp.arange(npos, dtype=jnp.int32)[None, :]
+    ok = match & (pos + m <= lens[:, None].astype(jnp.int32))
+    if start is not None:
+        ok = ok & (pos >= start[:, None].astype(jnp.int32))
+    scores = jnp.where(ok, pos, jnp.int32(npos + 1))
+    first = scores.min(axis=1)
+    return jnp.where(first <= npos, first, jnp.int32(-1)).astype(jnp.int32)
+
+
+def exists_before(packed, lens, pat_a, pat_b) -> jax.Array:
+    fa = substr_find(packed, lens, pat_a)
+    start = jnp.where(fa >= 0, fa + pat_a.shape[0], 0).astype(jnp.int32)
+    fb = substr_find(packed, lens, pat_b, start=start)
+    return (fa >= 0) & (fb >= 0)
+
+
+# ----------------------------------------------------------------------
+# segment_sum on sorted segment ids
+# ----------------------------------------------------------------------
+def segment_sum_sorted(values: jax.Array, seg_ids: jax.Array, num_segments: int) -> jax.Array:
+    return jax.ops.segment_sum(
+        values, seg_ids, num_segments=num_segments, indices_are_sorted=True
+    )
+
+
+# ----------------------------------------------------------------------
+# causal GQA attention
+# ----------------------------------------------------------------------
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True) -> jax.Array:
+    """q (B, Hq, Sq, D); k,v (B, Hkv, Sk, D); GQA via head grouping."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scale = float(1.0 / np.sqrt(D))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        ki = jnp.arange(Sk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# RWKV6 WKV recurrence (data-dependent decay)
+# ----------------------------------------------------------------------
+def wkv6_reference(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array,
+    state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """All of r,k,v,w: (B, H, T, D); u: (H, D).
+
+      y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+    Returns (y (B,H,T,D), final state (B,H,D,D))."""
+    B, H, T, D = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, D, D), dtype=jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs  # (B,H,D) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,D,D)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(
+        jnp.moveaxis(x.astype(jnp.float32), 2, 0) for x in (r, k, v, w)
+    )  # (T, B, H, D)
+    final, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(r.dtype), final

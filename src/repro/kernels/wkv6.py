@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: RWKV6 (Finch) WKV recurrence with data-dependent
+per-channel decay.
+
+    y_t = r_t @ S_{t-1} + (r_t · (u ⊙ k_t)) v_t
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+The (D, D) state lives in VMEM scratch and is carried across the
+time-block grid dimension; each grid step streams a (BT, D) tile of
+r/k/v/w through registers.  One grid row per (batch, head).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BT = 64
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref, s_ref, *, bt):
+    ti = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)  # (D,)
+
+    def body(t, _):
+        rt = r_ref[0, 0, t, :].astype(jnp.float32)
+        kt = k_ref[0, 0, t, :].astype(jnp.float32)
+        vt = v_ref[0, 0, t, :].astype(jnp.float32)
+        wt = w_ref[0, 0, t, :].astype(jnp.float32)
+        S = s_ref[...]
+        y = rt @ S + jnp.sum(rt * u * kt) * vt
+        y_ref[0, 0, t, :] = y.astype(y_ref.dtype)
+        s_ref[...] = wt[:, None] * S + kt[:, None] * vt[None, :]
+        return 0
+
+    jax.lax.fori_loop(0, bt, body, 0)
+
+    @pl.when(ti == nt - 1)
+    def _finish():
+        sout_ref[0, 0] = s_ref[...]
+
+
+def wkv6_pallas(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    state: jax.Array | None = None,
+    *,
+    bt: int = DEFAULT_BT,
+    interpret: bool = True,
+):
+    """r/k/v/w (B, H, T, D); u (H, D); state (B, H, D, D) or None.
+
+    Returns (y (B,H,T,D), final_state (B,H,D,D) f32)."""
+    B, H, T, D = r.shape
+    bt = min(bt, T)
+    assert T % bt == 0, (T, bt)
+    if state is None:
+        state = jnp.zeros((B, H, D, D), dtype=jnp.float32)
+    grid = (B, H, T // bt)
+    y, sout = pl.pallas_call(
+        functools.partial(_kernel, bt=bt),
+        out_shape=(
+            jax.ShapeDtypeStruct(r.shape, r.dtype),
+            jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, D), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bt, D), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bt, D), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bt, D), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, D), lambda b, h, t: (h, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, t: (b, h, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, bt, D), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, t: (b, h, 0, 0)),
+        ),
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return y, sout

@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, per-cell input specs, the multi-pod
+dry-run driver, and the train/serve entry points."""

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) cell:
+  jax.jit(step, in_shardings, out_shardings).lower(**input_specs).compile()
+then record memory_analysis / cost_analysis / parsed collective bytes
+into a JSON artifact consumed by benchmarks/bench_roofline.py and
+EXPERIMENTS.md.
+
+The two lines ABOVE the docstring run before any jax import: jax locks
+the device count at first init, and the production meshes need 512
+placeholder CPU devices.  (Do not set this flag globally — smoke tests
+and benches must see 1 device.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cell_applicable, input_specs
+from repro.models import lm, partition
+from repro.models.config import ModelConfig
+from repro.train.train_step import make_train_step
+
+# TPU v5e roofline constants
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+HBM_PER_CHIP = 16 * 1024**3
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, extra: Dict[str, Any] | None = None) -> Dict[str, Any]:
+    cfg = get(arch)
+    if extra:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **extra)
+    ok, why = cell_applicable(cfg, shape)
+    cell = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+    }
+    if not ok:
+        cell.update({"status": "skipped", "reason": why})
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    specs = input_specs(cfg, shape)
+    kind = specs["kind"]
+    t0 = time.time()
+
+    with mesh:
+        pspecs = partition.param_specs(
+            jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0))), cfg
+        )
+        if kind == "train":
+            from repro.train.optimizer import get_optimizer
+
+            opt = get_optimizer(cfg.optimizer)
+            state_specs = {
+                "params": pspecs,
+                "opt": opt.state_specs(pspecs, jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))),
+                "step": jax.sharding.PartitionSpec(),
+            }
+            step = make_train_step(cfg)
+        elif kind == "prefill":
+            state_specs = pspecs
+            step = lambda params, batch: lm.prefill(cfg, params, batch)
+        else:  # decode
+            state_specs = partition.decode_state_specs(mesh, specs["state"])
+            step = None  # built below with params closed over specs
+
+        batch_sp = partition.batch_specs(mesh, specs["batch"])
+        if kind == "decode":
+            # decode step signature: (params, state, batch)
+            def step(params, state, batch):  # noqa: F811
+                return lm.decode_step(cfg, params, state, batch)
+
+            jitted = jax.jit(
+                step,
+                in_shardings=(
+                    partition.shardings_from_specs(mesh, pspecs),
+                    partition.shardings_from_specs(mesh, state_specs),
+                    partition.shardings_from_specs(mesh, batch_sp),
+                ),
+            )
+            params_shape = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+            lowered = jitted.lower(params_shape, specs["state"], specs["batch"])
+        else:
+            jitted = jax.jit(
+                step,
+                in_shardings=(
+                    partition.shardings_from_specs(mesh, state_specs),
+                    partition.shardings_from_specs(mesh, batch_sp),
+                ),
+            )
+            lowered = jitted.lower(specs["state"], specs["batch"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    ha = hlo_analysis.analyze(hlo)
+    coll = {k[len("coll_"):]: int(v) for k, v in ha.items() if k.startswith("coll_")}
+
+    # cost_analysis is per-device and counts while (scan) bodies once;
+    # the HLO walk trip-weights dots, so take the max of both estimates
+    flops_per_device = max(float(cost.get("flops", 0.0)), float(ha.get("dot_flops", 0.0)))
+    bytes_per_device = max(
+        float(cost.get("bytes accessed", 0.0)), float(ha.get("dot_bytes", 0.0))
+    )
+    coll_total = int(coll.get("total", 0))
+
+    sp = SHAPES[shape]
+    tokens = sp.global_batch * (sp.seq_len if kind != "decode" else 1)
+    n_par = cfg.param_count()
+    n_act = cfg.active_param_count()
+    model_flops = (6 if kind == "train" else 2) * n_act * tokens
+
+    compute_t = flops_per_device / PEAK_FLOPS
+    memory_t = bytes_per_device / HBM_BW
+    collective_t = coll_total / (chips * ICI_BW)
+
+    def _mem(attr):
+        v = getattr(mem, attr, None)
+        return int(v) if v is not None else None
+
+    cell.update(
+        {
+            "status": "ok",
+            "kind": kind,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "flops_per_device": flops_per_device,
+            "bytes_per_device": bytes_per_device,
+            "collective_bytes_total": coll_total,
+            "collectives": {k: v for k, v in coll.items() if k != "total"},
+            "cost_analysis_flops": float(cost.get("flops", 0.0)),
+            "dot_flops_trip_weighted": float(ha.get("dot_flops", 0.0)),
+            "giant_intermediate_bytes": float(ha.get("giant_bytes", 0.0)),
+            "memory_s_fused_kernels": max(
+                0.0, (bytes_per_device - float(ha.get("giant_bytes", 0.0))) / HBM_BW
+            ),
+            "memory": {
+                "argument_bytes": _mem("argument_size_in_bytes"),
+                "output_bytes": _mem("output_size_in_bytes"),
+                "temp_bytes": _mem("temp_size_in_bytes"),
+                "peak_bytes": _mem("peak_memory_in_bytes"),
+            },
+            "tokens": tokens,
+            "params": n_par,
+            "active_params": n_act,
+            "model_flops": model_flops,
+            "roofline": {
+                "compute_s": compute_t,
+                "memory_s": memory_t,
+                "collective_s": collective_t,
+                "dominant": max(
+                    [("compute", compute_t), ("memory", memory_t), ("collective", collective_t)],
+                    key=lambda kv: kv[1],
+                )[0],
+                "useful_flops_ratio": (
+                    model_flops / (flops_per_device * chips)
+                    if flops_per_device
+                    else None
+                ),
+            },
+        }
+    )
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--override", default="", help="k=v,... ModelConfig overrides")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    extra: Dict[str, Any] = {}
+    for kv in filter(None, args.override.split(",")):
+        k, v = kv.split("=")
+        try:
+            extra[k] = int(v)
+        except ValueError:
+            try:
+                extra[k] = float(v)
+            except ValueError:
+                extra[k] = v
+
+    cells = []
+    if args.all:
+        targets = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        targets = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape in targets:
+        for mp in meshes:
+            name = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+            if args.tag:
+                name += f"__{args.tag}"
+            path = os.path.join(args.out, name + ".json")
+            try:
+                cell = run_cell(arch, shape, mp, extra or None)
+            except Exception as e:  # noqa: BLE001
+                cell = {
+                    "arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "status": "error",
+                    "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-4000:],
+                }
+            with open(path, "w") as f:
+                json.dump(cell, f, indent=1)
+            cells.append(cell)
+            st = cell["status"]
+            ro = cell.get("roofline", {})
+            print(
+                f"[{st:7s}] {name} "
+                f"compile={cell.get('compile_s', '-')}s "
+                f"dominant={ro.get('dominant', '-')} "
+                f"mem_peak={cell.get('memory', {}).get('peak_bytes', '-')}",
+                flush=True,
+            )
+    bad = [c for c in cells if c["status"] == "error"]
+    print(f"done: {len(cells)} cells, {len(bad)} errors")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

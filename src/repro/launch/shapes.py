@@ -1,0 +1,84 @@
+"""The assigned input-shape set and per-(arch, shape) input specs.
+
+ShapeDtypeStruct stand-ins only — weak-type-correct, shardable, no
+device allocation.  ``long_500k`` applies only to sub-quadratic
+architectures (rwkv6, zamba2); the skip is recorded per cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, "full-attention arch: 500k decode requires sub-quadratic state (skip per assignment)"
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs_for(cfg: ModelConfig, sp: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the step-function's batch argument."""
+    B, S = sp.global_batch, sp.seq_len
+    if sp.kind == "decode":
+        S_in = 1
+    else:
+        S_in = S
+    batch: Dict[str, Any] = {}
+    if cfg.embed_inputs:
+        batch["tokens"] = sds((B, S_in), "int32")
+    else:
+        batch["embeddings"] = sds((B, S_in, cfg.d_model), cfg.compute_dtype)
+    if cfg.cross_attn_every:
+        batch["img_embed"] = sds((B, cfg.n_img_tokens, cfg.d_model), cfg.compute_dtype)
+    if sp.kind == "train":
+        batch["labels"] = sds((B, S_in), "int32")
+    return batch
+
+
+def state_shapes_for(cfg: ModelConfig, sp: ShapeSpec):
+    """eval_shape of train state / decode state (no allocation)."""
+    if sp.kind == "train":
+        from repro.train.train_step import init_train_state
+
+        return jax.eval_shape(lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+    if sp.kind == "decode":
+        return jax.eval_shape(
+            lambda: lm.init_decode_state(cfg, sp.global_batch, sp.seq_len)
+        )
+    # prefill: params only
+    return jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    sp = SHAPES[shape_name]
+    return {
+        "state": state_shapes_for(cfg, sp),
+        "batch": batch_specs_for(cfg, sp),
+        "kind": sp.kind,
+    }

@@ -1,0 +1,7 @@
+"""LM architecture zoo: dense/MoE/SSM/hybrid/VLM/audio decoder stacks.
+
+Pure-JAX, explicit dtypes, lax.scan over stacked layer parameters,
+pjit-shardable (partition.py).  Does NOT import repro.core (which flips
+x64): the relational engine and the model stack are separate layers of
+the framework.
+"""

@@ -1,0 +1,302 @@
+"""Shared neural net layers: RMSNorm, RoPE, GQA attention (train /
+chunked-prefill / cached-decode), SwiGLU MLP, and sort-based MoE.
+
+Everything is expressed with einsums over explicitly-shaped weights so
+the XLA SPMD partitioner can shard from the weight PartitionSpecs in
+partition.py.  No framework dependencies (no flax) — parameters are
+plain pytrees of jax.Arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+def rope_frequencies(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, hd); positions (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta))  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# attention
+# ----------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Dict:
+    D, hd = cfg.d_model, cfg.hd
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    pd = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(D)
+    p = {
+        "wq": (jax.random.normal(k1, (D, Hq * hd)) * s).astype(pd),
+        "wk": (jax.random.normal(k2, (D, Hkv * hd)) * s).astype(pd),
+        "wv": (jax.random.normal(k3, (D, Hkv * hd)) * s).astype(pd),
+        "wo": (jax.random.normal(k4, (Hq * hd, D)) * s).astype(pd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq * hd,), pd)
+        p["bk"] = jnp.zeros((Hkv * hd,), pd)
+        p["bv"] = jnp.zeros((Hkv * hd,), pd)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), pd)
+        p["k_norm"] = jnp.ones((hd,), pd)
+    if cross:
+        p["gate"] = jnp.zeros((), pd)  # tanh-gated cross-attn (llama-vision)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x: jax.Array, kv_x: jax.Array):
+    """x (B,S,D) -> q (B,S,Hq,hd), k/v (B,Skv,Hkv,hd)."""
+    hd = cfg.hd
+    dt = cdtype(cfg)
+    q = jnp.einsum("bsd,dh->bsh", x.astype(dt), p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", kv_x.astype(dt), p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", kv_x.astype(dt), p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(*q.shape[:2], cfg.n_heads, hd)
+    k = k.reshape(*k.shape[:2], cfg.n_kv_heads, hd)
+    v = v.reshape(*v.shape[:2], cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset, kv_len=None, kv_start=None):
+    """q (B,Sq,Hq,hd); k,v (B,Sk,Hkv,hd).  Grouped-query attention with
+    f32 softmax.  kv_len masks out positions >= kv_len (decode caches)."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, group, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits / float(np.sqrt(hd))
+    ki = jnp.arange(Sk)[None, :]
+    if causal:
+        qi = (q_offset + jnp.arange(Sq))[:, None]
+        logits = jnp.where(ki <= qi, logits, -1e30)
+    if kv_len is not None:
+        logits = jnp.where(ki < kv_len, logits, -1e30)
+    if kv_start is not None:
+        # per-batch-slot window start (continuous batching: refilled
+        # slots must not attend the previous occupant's cache prefix)
+        start = kv_start.astype(jnp.int32).reshape(-1, 1, 1, 1, 1)  # (B,1,1,1,1)
+        logits = jnp.where(
+            jnp.arange(Sk)[None, None, None, None, :] >= start, logits, -1e30
+        )
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def attention(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    kv_x: Optional[jax.Array] = None,
+    rope: bool = True,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Training / prefill attention.  Returns (out, (k, v)) for caching.
+
+    Long sequences are processed in query chunks of cfg.q_chunk to bound
+    the live logits buffer (XLA path used by the dry-run; the Pallas
+    flash kernel replaces this on real TPUs)."""
+    kv_src = x if kv_x is None else kv_x
+    q, k, v = _qkv(p, cfg, x, kv_src)
+    if rope and kv_x is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    S = x.shape[1]
+    if S <= cfg.q_chunk or kv_x is not None:
+        out = _sdpa(q, k, v, causal=causal and kv_x is None, q_offset=0)
+    else:
+        nchunk = S // cfg.q_chunk
+        qs = q.reshape(q.shape[0], nchunk, cfg.q_chunk, *q.shape[2:])
+
+        def chunk_fn(carry, inp):
+            ci, qc = inp
+            oc = _sdpa(qc, k, v, causal=causal, q_offset=ci * cfg.q_chunk)
+            return carry, oc
+
+        _, outs = jax.lax.scan(
+            chunk_fn, 0, (jnp.arange(nchunk), jnp.moveaxis(qs, 1, 0))
+        )
+        out = jnp.moveaxis(outs, 0, 1).reshape(q.shape)
+    dt = cdtype(cfg)
+    y = jnp.einsum(
+        "bsh,hd->bsd",
+        out.reshape(out.shape[0], out.shape[1], -1).astype(dt),
+        p["wo"].astype(dt),
+    )
+    if "gate" in p:
+        y = jnp.tanh(p["gate"].astype(dt)) * y
+    return y, (k, v)
+
+
+def decode_attention(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    pos: jax.Array,
+    *,
+    rope: bool = True,
+    update_cache: bool = True,
+    kv_len=None,
+    kv_start=None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode against a (B, Smax, Hkv, hd) KV cache.
+
+    Returns (out, new_cache_k, new_cache_v)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k, v = _qkv(p, cfg, x, x)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if update_cache:
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    out = _sdpa(q, cache_k, cache_v, causal=False, q_offset=0,
+                kv_len=(pos + 1) if kv_len is None else kv_len,
+                kv_start=kv_start)
+    dt = cdtype(cfg)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, -1).astype(dt), p["wo"].astype(dt))
+    if "gate" in p:
+        y = jnp.tanh(p["gate"].astype(dt)) * y
+    return y, cache_k, cache_v
+
+
+# ----------------------------------------------------------------------
+# MLP (SwiGLU)
+# ----------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    pd = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / np.sqrt(D)
+    return {
+        "w_gate": (jax.random.normal(k1, (D, F)) * s).astype(pd),
+        "w_up": (jax.random.normal(k2, (D, F)) * s).astype(pd),
+        "w_down": (jax.random.normal(k3, (F, D)) / np.sqrt(F)).astype(pd),
+    }
+
+
+def mlp(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dt = cdtype(cfg)
+    g = jnp.einsum("bsd,df->bsf", x.astype(dt), p["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x.astype(dt), p["w_up"].astype(dt))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"].astype(dt))
+
+
+# ----------------------------------------------------------------------
+# MoE: sort-based capacity dispatch (no one-hot einsum waste)
+# ----------------------------------------------------------------------
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    D, F = cfg.d_model, cfg.d_ff
+    E = cfg.moe.n_experts
+    pd = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s = 1.0 / np.sqrt(D)
+    p = {
+        "router": (jax.random.normal(k1, (D, E)) * s).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (E, D, F)) * s).astype(pd),
+        "w_up": (jax.random.normal(k3, (E, D, F)) * s).astype(pd),
+        "w_down": (jax.random.normal(k4, (E, F, D)) / np.sqrt(F)).astype(pd),
+    }
+    if cfg.moe.n_shared:
+        p["shared"] = init_mlp(k5, cfg, d_ff=cfg.moe.n_shared * cfg.d_ff)
+    return p
+
+
+def moe_ffn(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x (B, S, D).  Sort-based top-k dispatch into an (E, C, D) buffer:
+    FLOPs stay ~ active-expert FLOPs (capacity_factor overhead only)."""
+    mc = cfg.moe
+    B, S, D = x.shape
+    N = B * S
+    dt = cdtype(cfg)
+    xt = x.reshape(N, D)
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, mc.top_k)  # (N, K)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    K = mc.top_k
+    E = mc.n_experts
+    C = int(np.ceil(N * K * mc.capacity_factor / E))
+    C = max(1, min(C, N))
+    flat_e = top_e.reshape(-1).astype(jnp.int32)  # (N*K,)
+    order = jnp.argsort(flat_e)  # stable: ties keep token order
+    sorted_e = flat_e[order]
+    # rank within expert = position - first index of that expert's run
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(N * K, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = rank < C
+    dest = jnp.where(keep, sorted_e * C + rank, E * C)  # overflow -> trash row
+    src_token = order // K
+    buf = jnp.zeros((E * C + 1, D), dtype=dt)
+    buf = buf.at[dest].set(xt[src_token].astype(dt), mode="drop")
+    buf = buf[: E * C].reshape(E, C, D)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"].astype(dt))
+
+    y_flat = jnp.concatenate([y.reshape(E * C, D), jnp.zeros((1, D), dt)], axis=0)
+    per_slot = y_flat[jnp.where(keep, dest, E * C)]  # (N*K, D)
+    gates = top_p.reshape(-1)[order].astype(dt)
+    contrib = per_slot * jnp.where(keep, gates, 0.0)[:, None]
+    out = jnp.zeros((N, D), dtype=dt).at[src_token].add(contrib)
+    if mc.n_shared:
+        out = out + mlp(p["shared"], cfg, x).reshape(N, D)
+    return out.reshape(B, S, D)
+
+
+def moe_aux_loss(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Load-balancing auxiliary loss (switch-style)."""
+    mc = cfg.moe
+    xt = x.reshape(-1, x.shape[-1])
+    probs = jax.nn.softmax((xt.astype(jnp.float32) @ p["router"]), axis=-1)
+    top_e = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top_e, mc.n_experts, dtype=jnp.float32), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return mc.n_experts * jnp.sum(frac * imp)

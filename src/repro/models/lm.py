@@ -1,0 +1,381 @@
+"""Model facade: init / forward / prefill / decode for every assigned
+architecture family, built on lax.scan over stacked layer parameters
+(compact HLO for the 512-device dry-run) with configurable remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers, mamba, rwkv
+from .config import ModelConfig
+from .layers import cdtype
+
+
+# ----------------------------------------------------------------------
+# remat policy
+# ----------------------------------------------------------------------
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return jax.checkpoint(fn)  # 'nothing' saveable
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    pd = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    D, V = cfg.d_model, cfg.vocab
+    p: Dict = {
+        "final_norm": jnp.ones((D,), pd),
+        "lm_head": (jax.random.normal(keys[0], (D, V)) / np.sqrt(D)).astype(pd),
+    }
+    if cfg.embed_inputs:
+        p["embed"] = (jax.random.normal(keys[1], (V, D)) * 0.02).astype(pd)
+
+    if cfg.family == "rwkv6":
+        p["blocks"] = _stack_init(
+            lambda k: rwkv.init_rwkv_block(k, cfg), keys[2], cfg.n_layers
+        )
+        return p
+
+    if cfg.family == "mamba_hybrid":
+        p["blocks"] = _stack_init(
+            lambda k: mamba.init_mamba_block(k, cfg), keys[2], cfg.n_layers
+        )
+        # ONE shared attention+MLP block, reused every attn_every layers
+        p["shared_attn"] = {
+            "norm1": jnp.ones((D,), pd),
+            "attn": layers.init_attention(keys[3], cfg),
+            "norm2": jnp.ones((D,), pd),
+            "mlp": layers.init_mlp(keys[4], cfg),
+        }
+        return p
+
+    def init_block(k):
+        k1, k2 = jax.random.split(k)
+        blk = {
+            "norm1": jnp.ones((D,), pd),
+            "attn": layers.init_attention(k1, cfg),
+            "norm2": jnp.ones((D,), pd),
+        }
+        if cfg.moe:
+            blk["moe"] = layers.init_moe(k2, cfg)
+        else:
+            blk["mlp"] = layers.init_mlp(k2, cfg)
+        return blk
+
+    if cfg.cross_attn_every:
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        n_self = cfg.n_layers - n_cross
+        p["blocks"] = _stack_init(init_block, keys[2], n_self)
+
+        def init_cross(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "norm1": jnp.ones((D,), pd),
+                "attn": layers.init_attention(k1, cfg, cross=True),
+                "norm2": jnp.ones((D,), pd),
+                "mlp": layers.init_mlp(k2, cfg),
+            }
+
+        p["cross_blocks"] = _stack_init(init_cross, keys[5], n_cross)
+        return p
+
+    p["blocks"] = _stack_init(init_block, keys[2], cfg.n_layers)
+    return p
+
+
+# ----------------------------------------------------------------------
+# forward (train / prefill)
+# ----------------------------------------------------------------------
+def _self_block(cfg: ModelConfig, x, bp, positions):
+    h, _ = layers.attention(
+        bp["attn"], cfg, layers.rms_norm(x, bp["norm1"], cfg.norm_eps), positions
+    )
+    x = x + h
+    xn = layers.rms_norm(x, bp["norm2"], cfg.norm_eps)
+    if "moe" in bp:
+        x = x + layers.moe_ffn(bp["moe"], cfg, xn)
+    else:
+        x = x + layers.mlp(bp["mlp"], cfg, xn)
+    return x
+
+
+def _cross_block(cfg: ModelConfig, x, bp, img):
+    h, _ = layers.attention(
+        bp["attn"], cfg, layers.rms_norm(x, bp["norm1"], cfg.norm_eps),
+        positions=None, kv_x=img, causal=False,
+    )
+    x = x + h
+    x = x + layers.mlp(bp["mlp"], cfg, layers.rms_norm(x, bp["norm2"], cfg.norm_eps))
+    return x
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Dict,
+    batch: Dict[str, jax.Array],
+    return_hidden: bool = False,
+) -> jax.Array:
+    """batch: {'tokens' (B,S) | 'embeddings' (B,S,D)} [+ 'img_embed'].
+    Returns logits (B, S, V) in f32 (or final hidden states)."""
+    dt = cdtype(cfg)
+    if cfg.embed_inputs:
+        x = params["embed"].astype(dt)[batch["tokens"]]
+    else:
+        x = batch["embeddings"].astype(dt)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    if cfg.family == "rwkv6":
+        def block(x, bp):
+            y, _ = rwkv.rwkv_block(bp, cfg, x)
+            return y, None
+        x, _ = jax.lax.scan(_remat(block, cfg), x, params["blocks"])
+    elif cfg.family == "mamba_hybrid":
+        sp = params["shared_attn"]
+        groups = cfg.n_layers // cfg.attn_every
+
+        def mblock(x, bp):
+            y, _ = mamba.mamba_block(bp, cfg, x)
+            return y, None
+
+        stacked = jax.tree.map(
+            lambda a: a.reshape(groups, cfg.attn_every, *a.shape[1:]), params["blocks"]
+        )
+
+        def group(x, gp):
+            x, _ = jax.lax.scan(_remat(mblock, cfg), x, gp)
+            # shared attention block (same params every group)
+            h, _ = layers.attention(
+                sp["attn"], cfg, layers.rms_norm(x, sp["norm1"], cfg.norm_eps), positions
+            )
+            x = x + h
+            x = x + layers.mlp(sp["mlp"], cfg, layers.rms_norm(x, sp["norm2"], cfg.norm_eps))
+            return x, None
+
+        x, _ = jax.lax.scan(group, x, stacked)
+    elif cfg.cross_attn_every:
+        img = batch["img_embed"].astype(dt)
+        per = cfg.cross_attn_every - 1
+        groups = cfg.n_layers // cfg.cross_attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape(groups, per, *a.shape[1:]), params["blocks"]
+        )
+
+        def sblock(x, bp):
+            return _remat(lambda x, bp: _self_block(cfg, x, bp, positions), cfg)(x, bp), None
+
+        def group(x, gp):
+            selfs, crossp = gp
+            x, _ = jax.lax.scan(sblock, x, selfs)
+            x = _remat(lambda x, bp: _cross_block(cfg, x, bp, img), cfg)(x, crossp)
+            return x, None
+
+        x, _ = jax.lax.scan(group, x, (stacked, params["cross_blocks"]))
+    else:
+        def block(x, bp):
+            return _remat(lambda x, bp: _self_block(cfg, x, bp, positions), cfg)(x, bp), None
+        x, _ = jax.lax.scan(block, x, params["blocks"])
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(dt))
+    return logits.astype(jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, Dict]:
+    logits = forward(cfg, params, batch)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(ll)
+    loss = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"loss": loss, "tokens": mask.sum()}
+
+
+# ----------------------------------------------------------------------
+# decode state
+# ----------------------------------------------------------------------
+def init_decode_state(cfg: ModelConfig, batch_size: int, max_len: int) -> Dict:
+    dt = cdtype(cfg)
+    L, D = cfg.n_layers, cfg.d_model
+    if cfg.family == "rwkv6":
+        H = cfg.n_heads
+        hd = D // H
+        return {
+            "S": jnp.zeros((L, batch_size, H, hd, hd), jnp.float32),
+            "tm_prev": jnp.zeros((L, batch_size, 1, D), dt),
+            "cm_prev": jnp.zeros((L, batch_size, 1, D), dt),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "mamba_hybrid":
+        groups = L // cfg.attn_every
+        return {
+            "h": jnp.zeros((L, batch_size, cfg.ssm_heads or cfg.n_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            "k": jnp.zeros((groups, batch_size, max_len, cfg.n_kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((groups, batch_size, max_len, cfg.n_kv_heads, cfg.hd), dt),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    state = {
+        "k": jnp.zeros((L, batch_size, max_len, cfg.n_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((L, batch_size, max_len, cfg.n_kv_heads, cfg.hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.cross_attn_every:
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        state["xk"] = jnp.zeros((n_cross, batch_size, cfg.n_img_tokens, cfg.n_kv_heads, cfg.hd), dt)
+        state["xv"] = jnp.zeros((n_cross, batch_size, cfg.n_img_tokens, cfg.n_kv_heads, cfg.hd), dt)
+        # self-attn cache excludes cross layers
+        n_self = cfg.n_layers - n_cross
+        state["k"] = jnp.zeros((n_self, batch_size, max_len, cfg.n_kv_heads, cfg.hd), dt)
+        state["v"] = jnp.zeros((n_self, batch_size, max_len, cfg.n_kv_heads, cfg.hd), dt)
+    return state
+
+
+# ----------------------------------------------------------------------
+# decode step (one new token against the cache)
+# ----------------------------------------------------------------------
+def decode_step(
+    cfg: ModelConfig,
+    params: Dict,
+    state: Dict,
+    batch: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict]:
+    """batch: {'tokens' (B,1) | 'embeddings' (B,1,D)} [+ 'img_embed'].
+    Returns (logits (B, V) f32, new state)."""
+    dt = cdtype(cfg)
+    if cfg.embed_inputs:
+        x = params["embed"].astype(dt)[batch["tokens"]]
+    else:
+        x = batch["embeddings"].astype(dt)
+    pos = state["pos"]
+    new_state = dict(state)
+
+    if cfg.family == "rwkv6":
+        def block(x, xs):
+            bp, S, tm, cm = xs
+            y, ns = rwkv.rwkv_block(bp, cfg, x, state={"S": S, "tm_prev": tm, "cm_prev": cm})
+            return y, (ns["S"], ns["tm_prev"], ns["cm_prev"])
+
+        x, (S2, tm2, cm2) = jax.lax.scan(
+            block, x, (params["blocks"], state["S"], state["tm_prev"], state["cm_prev"])
+        )
+        new_state.update({"S": S2, "tm_prev": tm2, "cm_prev": cm2})
+    elif cfg.family == "mamba_hybrid":
+        sp = params["shared_attn"]
+        groups = cfg.n_layers // cfg.attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape(groups, cfg.attn_every, *a.shape[1:]), params["blocks"]
+        )
+        hstk = state["h"].reshape(groups, cfg.attn_every, *state["h"].shape[1:])
+
+        def mblock(x, xs):
+            bp, h = xs
+            y, h2 = mamba.mamba_block(bp, cfg, x, state=h)
+            return y, h2
+
+        def group(x, xs):
+            gp, hs, ck, cv = xs
+            x, h2 = jax.lax.scan(mblock, x, (gp, hs))
+            hh, ck2, cv2 = layers.decode_attention(
+                sp["attn"], cfg, layers.rms_norm(x, sp["norm1"], cfg.norm_eps), ck, cv, pos
+            )
+            x = x + hh
+            x = x + layers.mlp(sp["mlp"], cfg, layers.rms_norm(x, sp["norm2"], cfg.norm_eps))
+            return x, (h2, ck2, cv2)
+
+        x, (h2, k2, v2) = jax.lax.scan(group, x, (stacked, hstk, state["k"], state["v"]))
+        new_state.update({"h": h2.reshape(state["h"].shape), "k": k2, "v": v2})
+    elif cfg.cross_attn_every:
+        per = cfg.cross_attn_every - 1
+        groups = cfg.n_layers // cfg.cross_attn_every
+        stacked = jax.tree.map(
+            lambda a: a.reshape(groups, per, *a.shape[1:]), params["blocks"]
+        )
+        kstk = state["k"].reshape(groups, per, *state["k"].shape[1:])
+        vstk = state["v"].reshape(groups, per, *state["v"].shape[1:])
+
+        def sblock(x, xs):
+            bp, ck, cv = xs
+            h, ck2, cv2 = layers.decode_attention(
+                bp["attn"], cfg, layers.rms_norm(x, bp["norm1"], cfg.norm_eps), ck, cv, pos
+            )
+            x = x + h
+            x = x + layers.mlp(bp["mlp"], cfg, layers.rms_norm(x, bp["norm2"], cfg.norm_eps))
+            return x, (ck2, cv2)
+
+        def group2(x, xs):
+            gp, crossp, ks, vs, xk, xv = xs
+            x, (k2, v2) = jax.lax.scan(sblock, x, (gp, ks, vs))
+            h, _, _ = layers.decode_attention(
+                crossp["attn"], cfg,
+                layers.rms_norm(x, crossp["norm1"], cfg.norm_eps),
+                xk, xv, pos, rope=False, update_cache=False,
+                kv_len=cfg.n_img_tokens,
+            )
+            x = x + h
+            x = x + layers.mlp(crossp["mlp"], cfg, layers.rms_norm(x, crossp["norm2"], cfg.norm_eps))
+            return x, (k2, v2)
+
+        x, (k2, v2) = jax.lax.scan(
+            group2, x, (stacked, params["cross_blocks"], kstk, vstk, state["xk"], state["xv"])
+        )
+        new_state.update({
+            "k": k2.reshape(state["k"].shape),
+            "v": v2.reshape(state["v"].shape),
+        })
+    else:
+        kv_start = batch.get("kv_start")
+
+        def block(x, xs):
+            bp, ck, cv = xs
+            h, ck2, cv2 = layers.decode_attention(
+                bp["attn"], cfg, layers.rms_norm(x, bp["norm1"], cfg.norm_eps), ck, cv, pos,
+                kv_start=kv_start,
+            )
+            x = x + h
+            xn = layers.rms_norm(x, bp["norm2"], cfg.norm_eps)
+            if "moe" in bp:
+                x = x + layers.moe_ffn(bp["moe"], cfg, xn)
+            else:
+                x = x + layers.mlp(bp["mlp"], cfg, xn)
+            return x, (ck2, cv2)
+
+        x, (k2, v2) = jax.lax.scan(block, x, (params["blocks"], state["k"], state["v"]))
+        new_state.update({"k": k2, "v": v2})
+
+    new_state["pos"] = pos + 1
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(dt))
+    return logits[:, 0].astype(jnp.float32), new_state
+
+
+def prefill(cfg: ModelConfig, params: Dict, batch: Dict) -> jax.Array:
+    """Prefill: run the stack over the prompt (the KV-cache writes are
+    the same compute) and emit logits for the LAST position only — a
+    production prefill never materializes (B, S, V) logits."""
+    h = forward(cfg, params, batch, return_hidden=True)
+    dt = layers.cdtype(cfg)
+    logits = jnp.einsum(
+        "bd,dv->bv", h[:, -1, :], params["lm_head"].astype(dt)
+    )
+    return logits.astype(jnp.float32)

@@ -1,0 +1,132 @@
+"""Mamba2 (SSD) blocks for the Zamba2 hybrid.
+
+Chunked state-space-dual form: within-chunk work is matmuls over a
+segment-sum decay matrix (MXU-friendly), the (H, P, N) state is carried
+across chunks by a scan — and is the O(1) decode state.
+
+Simplifications vs the full Mamba2 block (documented in DESIGN.md):
+single B/C group, no depthwise conv1d prefix.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import cdtype, rms_norm
+
+
+def init_mamba_block(key, cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    H = cfg.ssm_heads or cfg.n_heads
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    d_inner = H * P
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(D)
+    return {
+        "norm": jnp.ones((D,), pd),
+        "in_proj": (
+            jax.random.normal(ks[0], (D, 2 * d_inner + 2 * N + H)) * s
+        ).astype(pd),
+        "out_proj": (jax.random.normal(ks[1], (d_inner, D)) / np.sqrt(d_inner)).astype(pd),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gated_norm": jnp.ones((d_inner,), pd),
+    }
+
+
+def _segsum(loga: jax.Array) -> jax.Array:
+    """loga (..., C) -> (..., C, C) lower-tri cumulative sums:
+    out[t, s] = sum_{r=s+1..t} loga[r] (0 on diagonal, -inf above)."""
+    C = loga.shape[-1]
+    cs = jnp.cumsum(loga, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{r=s+1..t}
+    ti = jnp.arange(C)[:, None]
+    si = jnp.arange(C)[None, :]
+    return jnp.where(si <= ti, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    xbar: jax.Array,  # (B, T, H, P)  (already dt-scaled inputs)
+    loga: jax.Array,  # (B, T, H)     log decay per step
+    Bm: jax.Array,  # (B, T, N)
+    Cm: jax.Array,  # (B, T, N)
+    state: Optional[jax.Array] = None,  # (B, H, P, N) f32
+    chunk: int = 64,
+) -> Tuple[jax.Array, jax.Array]:
+    B_, T, H, P = xbar.shape
+    N = Bm.shape[-1]
+    while T % chunk:
+        chunk //= 2
+    nchunks = T // chunk
+    if state is None:
+        state = jnp.zeros((B_, H, P, N), dtype=jnp.float32)
+
+    def to_chunks(x, extra_dims):
+        return jnp.moveaxis(
+            x.astype(jnp.float32).reshape(B_, nchunks, chunk, *extra_dims), 1, 0
+        )
+
+    xc = to_chunks(xbar, (H, P))
+    ac = to_chunks(loga, (H,))
+    bc = to_chunks(Bm, (N,))
+    cc = to_chunks(Cm, (N,))
+
+    def step(h, xs):
+        xb, la, bm, cm = xs  # (B,C,H,P), (B,C,H), (B,C,N), (B,C,N)
+        la_h = jnp.moveaxis(la, -1, 1)  # (B,H,C)
+        L = jnp.exp(_segsum(la_h))  # (B,H,C,C) includes diagonal (decay s->t)
+        # intra-chunk: y_t += C_t . sum_s L[t,s] (xbar_s B_s)
+        y_intra = jnp.einsum("btn,bhts,bsn,bshp->bthp", cm, L, bm, xb)
+        # inter-chunk: decay from chunk start to t
+        dec0 = jnp.exp(jnp.cumsum(la_h, axis=-1))  # (B,H,C) decay including step t
+        y_inter = jnp.einsum("bcn,bhc,bhpn->bchp", cm, dec0, h)
+        # new state: h' = total_decay * h + sum_s decay(s->end) xbar_s B_s
+        total = dec0[..., -1]  # (B,H)
+        dec_end = jnp.exp(
+            jnp.cumsum(la_h[..., ::-1], axis=-1)[..., ::-1] - la_h
+        )  # decay s+1..end
+        h_new = total[..., None, None] * h + jnp.einsum(
+            "bhs,bshp,bsn->bhpn", dec_end, xb, bm
+        )
+        return h_new, y_intra + y_inter
+
+    final, ys = jax.lax.scan(step, state, (xc, ac, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, T, H, P)
+    return y, final
+
+
+def mamba_block(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,D) -> (y, new_state (B,H,P,N) f32)."""
+    B, S, D = x.shape
+    H, P, N = (cfg.ssm_heads or cfg.n_heads), cfg.ssm_head_dim, cfg.ssm_state
+    d_inner = H * P
+    dt = cdtype(cfg)
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", xn.astype(dt), p["in_proj"].astype(dt))
+    z, xin, Bm, Cm, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    delta = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    loga = delta * A  # (B,S,H)
+    xh = xin.reshape(B, S, H, P).astype(jnp.float32)
+    xbar = xh * delta[..., None]
+    y, h_new = ssd_chunked(xbar, loga, Bm.astype(jnp.float32), Cm.astype(jnp.float32), state)
+    y = y + p["D_skip"][None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner).astype(dt)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["gated_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt))
+    return x + out, h_new

@@ -1,0 +1,175 @@
+"""Parameter/activation partition rules for the production meshes.
+
+Axes: ("pod", "data", "model") multi-pod or ("data", "model") single-pod.
+- TP over "model": attention heads, d_ff, vocab, experts (EP).
+- ZeRO-style parameter sharding over "data" on the other major dim.
+- DP batch over ("pod", "data").
+
+Rules match on parameter-path key names, so every architecture family
+shares one table.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# name -> spec builder over the trailing (non-layer-stacked) dims
+_RULES = [
+    # MoE experts: (E, D, F) / (E, F, D)
+    ("moe.w_gate", ("model", "data", None)),
+    ("moe.w_up", ("model", "data", None)),
+    ("moe.w_down", ("model", "data", None)),
+    ("moe.router", ("data", None)),
+    ("moe.shared.w_gate", ("data", "model")),
+    ("moe.shared.w_up", ("data", "model")),
+    ("moe.shared.w_down", ("model", "data")),
+    # attention
+    (".attn.wq", ("data", "model")),
+    (".attn.wk", ("data", "model")),
+    (".attn.wv", ("data", "model")),
+    (".attn.wo", ("model", "data")),
+    (".attn.bq", ("model",)),
+    (".attn.bk", ("model",)),
+    (".attn.bv", ("model",)),
+    # dense mlp
+    ("mlp.w_gate", ("data", "model")),
+    ("mlp.w_up", ("data", "model")),
+    ("mlp.w_down", ("model", "data")),
+    # rwkv
+    (".wr", ("data", "model")),
+    (".wk", ("data", "model")),
+    (".wv", ("data", "model")),
+    (".wg", ("data", "model")),
+    (".wo", ("model", "data")),
+    (".ck", ("data", "model")),
+    (".cv", ("model", "data")),
+    (".cr", ("data", "model")),
+    (".wA", ("data", None)),
+    (".wB", (None, "model")),
+    # mamba
+    ("in_proj", ("data", "model")),
+    ("out_proj", ("model", "data")),
+    # embeddings: vocab over data (ZeRO), d_model over model — the token
+    # gather then only all-gathers a (V, D/|model|) slice over 'data'
+    # instead of fully rematerializing a vocab-sharded table
+    ("embed", ("data", "model")),
+    ("lm_head", ("data", "model")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return ".".join(parts)
+
+
+def spec_for(path_str: str, ndim: int, stacked: bool) -> P:
+    """PartitionSpec for a parameter; `stacked` = leading layer dim."""
+    for pat, axes in _RULES:
+        if pat in "." + path_str:
+            trailing = list(axes)
+            lead = [None] if stacked else []
+            spec = lead + trailing
+            # pad/trim to ndim
+            while len(spec) < ndim:
+                spec.append(None)
+            return P(*spec[:ndim])
+    return P(*([None] * ndim))
+
+
+def _is_stacked(path_str: str) -> bool:
+    return path_str.startswith("blocks") or path_str.startswith("cross_blocks")
+
+
+_KV_PATTERNS = (".attn.wk", ".attn.wv", ".attn.bk", ".attn.bv")
+
+
+def param_specs(params_shape: Any, cfg=None) -> Any:
+    """Pytree of PartitionSpec matching a params (shape) pytree.
+
+    cfg.kv_shard == 'replicated' keeps KV projections unsharded on the
+    model axis: with GQA kv_heads < |model| the per-device KV slice is a
+    fraction of a head and the attention einsums force resharding
+    traffic; replicating the (small) KV projections removes it."""
+    replicate_kv = cfg is not None and getattr(cfg, "kv_shard", "model") == "replicated"
+
+    def fn(path, leaf):
+        ps = _path_str(path)
+        spec = spec_for(ps, len(leaf.shape), _is_stacked(ps))
+        if replicate_kv and any(pat in "." + ps for pat in _KV_PATTERNS):
+            spec = P(*[("data" if a == "data" else None) for a in (list(spec) + [None] * len(leaf.shape))[: len(leaf.shape)]])
+        return spec
+
+    return jax.tree_util.tree_map_with_path(fn, params_shape)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _divisible_dp(mesh: Mesh, B: int) -> Optional[Tuple[str, ...]]:
+    """Largest prefix of the dp axes that divides B (B=1 -> replicate)."""
+    axes = []
+    prod = 1
+    for a in batch_axes(mesh):
+        prod *= mesh.shape[a]
+        if B % prod == 0:
+            axes.append(a)
+        else:
+            break
+    return tuple(axes) if axes else None
+
+
+def batch_specs(mesh: Mesh, batch_shape: Any) -> Any:
+    """Shard the leading batch dim over (pod, data) where divisible."""
+
+    def fn(leaf):
+        B = leaf.shape[0] if leaf.ndim else 1
+        dp = _divisible_dp(mesh, B)
+        spec = [dp] + [None] * (leaf.ndim - 1) if dp else [None] * leaf.ndim
+        return P(*spec)
+
+    return jax.tree.map(fn, batch_shape)
+
+
+def decode_state_specs(mesh: Mesh, state_shape: Dict) -> Dict:
+    """KV caches: (L, B, Smax, Hkv, hd) -> batch over dp axes, sequence
+    over 'model' (flash-decode style sharded cache); recurrent states:
+    batch over dp axes."""
+
+    def fn(path, leaf):
+        name = _path_str(path)
+        if name in ("k", "v", "xk", "xv"):
+            B = leaf.shape[1]
+            dp = _divisible_dp(mesh, B)
+            smax = leaf.shape[2]
+            seq = "model" if smax % mesh.shape["model"] == 0 and smax >= 4096 else None
+            return P(None, dp, seq, None, None)
+        if name == "pos":
+            return P()
+        if name in ("S", "h"):  # (L, B, H, ...) recurrent states
+            B = leaf.shape[1]
+            dp = _divisible_dp(mesh, B)
+            spec = [None, dp] + [None] * (leaf.ndim - 2)
+            return P(*spec)
+        # tm_prev/cm_prev: (L, B, 1, D)
+        B = leaf.shape[1]
+        dp = _divisible_dp(mesh, B)
+        return P(*([None, dp] + [None] * (leaf.ndim - 2)))
+
+    return jax.tree_util.tree_map_with_path(fn, state_shape)
+
+
+def shardings_from_specs(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,182 @@
+"""RWKV6 (Finch) blocks: time-mix with data-dependent per-channel decay
+and channel-mix, in the chunked matmul-parallel form for train/prefill
+(MXU-friendly — the TPU adaptation of the recurrence; the Pallas wkv6
+kernel provides the fused per-step form) and O(1)-state decode.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import cdtype, rms_norm
+
+LORA_R = 64
+
+
+def init_rwkv_block(key, cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    H = cfg.n_heads
+    hd = D // H
+    F = cfg.d_ff
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 12)
+    s = 1.0 / np.sqrt(D)
+    return {
+        # time-mix
+        "tm_norm": jnp.ones((D,), pd),
+        "mix_r": jnp.full((D,), 0.5, pd),
+        "mix_k": jnp.full((D,), 0.5, pd),
+        "mix_v": jnp.full((D,), 0.5, pd),
+        "mix_w": jnp.full((D,), 0.5, pd),
+        "wr": (jax.random.normal(ks[0], (D, D)) * s).astype(pd),
+        "wk": (jax.random.normal(ks[1], (D, D)) * s).astype(pd),
+        "wv": (jax.random.normal(ks[2], (D, D)) * s).astype(pd),
+        "wg": (jax.random.normal(ks[3], (D, D)) * s).astype(pd),
+        "wo": (jax.random.normal(ks[4], (D, D)) * s).astype(pd),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((D,), -2.0, pd),
+        "wA": (jax.random.normal(ks[5], (D, LORA_R)) * s).astype(pd),
+        "wB": (jax.random.normal(ks[6], (LORA_R, D)) * 0.1).astype(pd),
+        "u": (jax.random.normal(ks[7], (H, hd)) * 0.1).astype(pd),
+        # channel-mix
+        "cm_norm": jnp.ones((D,), pd),
+        "cmix_k": jnp.full((D,), 0.5, pd),
+        "cmix_r": jnp.full((D,), 0.5, pd),
+        "ck": (jax.random.normal(ks[8], (D, F)) * s).astype(pd),
+        "cv": (jax.random.normal(ks[9], (F, D)) / np.sqrt(F)).astype(pd),
+        "cr": (jax.random.normal(ks[10], (D, D)) * s).astype(pd),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x (B,S,D): shift right by one; `prev` is the last token of the
+    previous segment (decode/state carry), zeros at start."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv6_chunked(
+    r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array, u: jax.Array,
+    state: Optional[jax.Array] = None, chunk: int = 32,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked-parallel WKV (the FLA-style matmul form).
+
+    r/k/v/w: (B, H, T, hd); u: (H, hd); state: (B, H, hd, hd) f32.
+      y_t = r_t @ S_{t-1} + (r_t . (u k_t)) v_t
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Within a chunk: P_t = prod_{s<=t} w_s;
+      y = ((r*P_prev) Kd^T ∘ mask) V + (r*P_prev) @ S0 + diag-term
+      with Kd rows k_s / P_s (exact; chunk kept short for conditioning).
+    """
+    B, H, T, hd = r.shape
+    assert T % chunk == 0, (T, chunk)
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), dtype=jnp.float32)
+    nchunks = T // chunk
+
+    def to_chunks(x):
+        return jnp.moveaxis(
+            x.astype(jnp.float32).reshape(B, H, nchunks, chunk, hd), 2, 0
+        )  # (nC, B, H, C, hd)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), dtype=jnp.float32), k=-1)
+
+    def step(S, xs):
+        rr, kk, vv, ww = xs  # (B,H,C,hd)
+        logw = jnp.log(jnp.clip(ww, 1e-12))
+        P = jnp.exp(jnp.cumsum(logw, axis=2))  # (B,H,C,hd) prod_{s<=t}
+        P_prev = P / ww  # prod_{s<t}
+        r_d = rr * P_prev
+        k_d = kk / jnp.clip(P, 1e-30)
+        att = jnp.einsum("bhti,bhsi->bhts", r_d, k_d) * mask  # s<t strictly
+        diag = jnp.einsum("bhti,hi,bhti->bht", rr, uf, kk)
+        y = (
+            jnp.einsum("bhts,bhsj->bhtj", att, vv)
+            + jnp.einsum("bhti,bhij->bhtj", r_d, S)
+            + diag[..., None] * vv
+        )
+        S_new = P[:, :, -1, :, None] * S + jnp.einsum(
+            "bhti,bhtj->bhij", k_d * P[:, :, -1:, :], vv
+        )
+        return S_new, y
+
+    final, ys = jax.lax.scan(step, state, (rc, kc, vc, wc))
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, T, hd)
+    return y.astype(r.dtype), final
+
+
+def rwkv_block(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    state: Optional[Dict] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Full RWKV6 block (time-mix + channel-mix).  state carries
+    {'S': (B,H,hd,hd), 'tm_prev': (B,1,D), 'cm_prev': (B,1,D)} for
+    segment-chained prefill and O(1) decode."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    dt = cdtype(cfg)
+    st = state or {}
+
+    # ---- time mix ----
+    xn = rms_norm(x, p["tm_norm"], cfg.norm_eps)
+    xs = _token_shift(xn, st.get("tm_prev"))
+
+    def mixed(name):
+        m = p["mix_" + name].astype(dt)
+        return xn * m + xs * (1 - m)
+
+    r = jnp.einsum("bsd,de->bse", mixed("r").astype(dt), p["wr"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", mixed("k").astype(dt), p["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", mixed("v").astype(dt), p["wv"].astype(dt))
+    g = jnp.einsum("bsd,de->bse", mixed("r").astype(dt), p["wg"].astype(dt))
+    # data-dependent decay
+    wl = jnp.einsum(
+        "bsr,rd->bsd",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", mixed("w").astype(dt), p["wA"].astype(dt))),
+        p["wB"].astype(dt),
+    )
+    w = jnp.exp(-jnp.exp((p["w0"].astype(jnp.float32) + wl.astype(jnp.float32))))
+
+    heads = lambda t: jnp.moveaxis(t.reshape(B, S, H, hd), 2, 1)  # (B,H,S,hd)
+    chunk = 32
+    while S % chunk:
+        chunk //= 2
+    y, S_out = wkv6_chunked(
+        heads(r), heads(k), heads(v), heads(w.astype(dt)), p["u"],
+        state=st.get("S"), chunk=chunk,
+    )
+    y = jnp.moveaxis(y, 1, 2).reshape(B, S, D)
+    y = y * jax.nn.silu(g)
+    y = jnp.einsum("bsd,de->bse", y.astype(dt), p["wo"].astype(dt))
+    x = x + y
+
+    # ---- channel mix ----
+    xn2 = rms_norm(x, p["cm_norm"], cfg.norm_eps)
+    xs2 = _token_shift(xn2, st.get("cm_prev"))
+    mk = p["cmix_k"].astype(dt)
+    mr = p["cmix_r"].astype(dt)
+    kk = jnp.einsum("bsd,df->bsf", (xn2 * mk + xs2 * (1 - mk)).astype(dt), p["ck"].astype(dt))
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["cv"].astype(dt))
+    rr = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", (xn2 * mr + xs2 * (1 - mr)).astype(dt), p["cr"].astype(dt))
+    )
+    x = x + rr * vv
+
+    new_state = {
+        "S": S_out,
+        "tm_prev": xn[:, -1:, :],
+        "cm_prev": xn2[:, -1:, :],
+    }
+    return x, new_state

@@ -1,0 +1,4 @@
+"""TPC-H (all 22) and TPC-DS (5) queries, each in two independent
+implementations: the TensorFrame API (tpch_frames / tpcds_frames) and a
+row-at-a-time Python reference (tpch_numpy / tpcds_numpy) used for
+correctness testing."""

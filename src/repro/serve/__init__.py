@@ -1,0 +1,2 @@
+"""Serving runtime: batched decode with KV caches / recurrent state,
+plus a simple continuous-batching request scheduler."""

@@ -1,0 +1,94 @@
+"""Batched serving engine: prefill + decode with a slot-based
+continuous-batching scheduler.
+
+Requests join a fixed pool of batch slots; finished/empty slots are
+refilled between decode steps (the static-shape TPU idiom for
+continuous batching — the decode step itself never recompiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_slots: int = 4, max_len: int = 128):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.state = lm.init_decode_state(cfg, batch_slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, dtype=np.int64)
+        self.slot_start = np.zeros(batch_slots, dtype=np.int32)  # cache window start
+        self._decode = jax.jit(lambda p, s, b: lm.decode_step(cfg, p, s, b))
+        self.steps = 0
+
+    # Slots advance in lockstep on a shared cache position; each slot
+    # carries a kv_start window so a refilled slot never attends the
+    # previous occupant's cache prefix (continuous batching).
+    def add_request(self, req: Request) -> bool:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                self.slot_req[i] = req
+                self.slot_pos[i] = 0
+                self.slot_start[i] = int(jax.device_get(self.state["pos"]))
+                return True
+        return False
+
+    def _next_tokens(self) -> np.ndarray:
+        toks = np.zeros((self.slots, 1), dtype=np.int32)
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            p = self.slot_pos[i]
+            if p < len(r.prompt):
+                toks[i, 0] = r.prompt[p]
+            elif r.out:
+                toks[i, 0] = r.out[-1]
+        return toks
+
+    def step(self, greedy: bool = True):
+        toks = self._next_tokens()
+        logits, self.state = self._decode(
+            self.params,
+            self.state,
+            {"tokens": jnp.asarray(toks), "kv_start": jnp.asarray(self.slot_start)},
+        )
+        self.steps += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            self.slot_pos[i] += 1
+            if self.slot_pos[i] >= len(r.prompt):
+                r.out.append(int(nxt[i]))
+                if len(r.out) >= r.max_new or self.slot_pos[i] >= self.max_len - 1:
+                    r.done = True
+                    self.slot_req[i] = None  # free the slot (continuous batching)
+
+    def run(self, requests: List[Request], max_steps: int = 1000) -> List[Request]:
+        pending = list(requests)
+        done: List[Request] = []
+        while (pending or any(self.slot_req)) and self.steps < max_steps:
+            while pending and self.add_request(pending[0]):
+                pending.pop(0)
+            self.step()
+            done += [r for r in requests if r.done and r not in done]
+        return requests

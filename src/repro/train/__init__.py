@@ -1,0 +1,2 @@
+"""Training runtime: optimizers, grad-accumulation step, sharded
+checkpointing with elastic resharding, fault-tolerant loop."""

@@ -1,0 +1,154 @@
+"""Fault-tolerant training loop.
+
+Features (each unit-tested at small scale):
+- crash recovery: restores the latest checkpoint on start;
+- periodic + preemption-signal-triggered atomic checkpoints (SIGTERM);
+- bounded retry of transient step failures (simulated node flake);
+- straggler mitigation: the data iterator is wrapped in a prefetch
+  thread with a per-batch deadline — a slow shard is skipped (its batch
+  replaced by the prefetched spare) and logged, instead of stalling the
+  step (the skip-slow-host strategy).
+"""
+from __future__ import annotations
+
+import logging
+import queue
+import signal
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+
+from . import checkpoint
+
+log = logging.getLogger("repro.train")
+
+
+class PrefetchIterator:
+    """Background-thread prefetch with a per-batch deadline."""
+
+    def __init__(self, it: Iterator, depth: int = 2, deadline_s: float = 30.0):
+        self._it = it
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._deadline = deadline_s
+        self._spare = None
+        self.skipped = 0
+        self._done = False
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._done = True
+            self._q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        try:
+            item = self._q.get(timeout=self._deadline)
+        except queue.Empty:
+            if self._spare is not None:
+                self.skipped += 1
+                log.warning("data deadline exceeded; reusing spare batch (straggler skip)")
+                return self._spare
+            raise StopIteration from None
+        if item is None:
+            raise StopIteration
+        self._spare = item
+        return item
+
+
+class TrainLoop:
+    def __init__(
+        self,
+        train_step: Callable,
+        state: Any,
+        data: Iterator,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 50,
+        max_step_retries: int = 2,
+        state_shardings: Any = None,
+        deadline_s: float = 30.0,
+        fault_hook: Optional[Callable[[int], None]] = None,  # test injection
+    ):
+        self.train_step = train_step
+        self.state = state
+        self.data = PrefetchIterator(iter(data), deadline_s=deadline_s)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.max_step_retries = max_step_retries
+        self.state_shardings = state_shardings
+        self.fault_hook = fault_hook
+        self.metrics_history = []
+        self._preempted = False
+
+    # ---- fault tolerance plumbing ----
+    def install_signal_handler(self, sig=signal.SIGTERM):
+        def handler(signum, frame):
+            log.warning("preemption signal received; checkpointing at next step")
+            self._preempted = True
+
+        signal.signal(sig, handler)
+
+    def maybe_restore(self):
+        if self.ckpt_dir and checkpoint.latest_step(self.ckpt_dir) is not None:
+            step = checkpoint.latest_step(self.ckpt_dir)
+            log.info("restoring checkpoint step %s", step)
+            self.state = checkpoint.restore(
+                self.ckpt_dir, self.state, step=step, shardings=self.state_shardings
+            )
+            return step
+        return None
+
+    def _checkpoint(self):
+        if self.ckpt_dir:
+            step = int(jax.device_get(self.state["step"]))
+            checkpoint.save(self.state, self.ckpt_dir, step)
+            checkpoint.prune(self.ckpt_dir)
+
+    # ---- the loop ----
+    def run(self, num_steps: int) -> Dict:
+        self.maybe_restore()
+        start = int(jax.device_get(self.state["step"]))
+        for i, batch in enumerate(self.data):
+            step_no = start + i
+            if step_no >= num_steps:
+                break
+            attempt = 0
+            while True:
+                try:
+                    if self.fault_hook:
+                        self.fault_hook(step_no)
+                    self.state, metrics = self.train_step(self.state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    break
+                except (jax.errors.JaxRuntimeError, RuntimeError) as e:
+                    attempt += 1
+                    if attempt > self.max_step_retries:
+                        log.error("step %s failed %s times; checkpoint + raise", step_no, attempt)
+                        self._checkpoint()
+                        raise
+                    log.warning("step %s attempt %s failed (%s); retrying", step_no, attempt, e)
+            self.metrics_history.append(
+                {k: float(jax.device_get(v)) for k, v in metrics.items()}
+            )
+            if self._preempted or (self.ckpt_every and (step_no + 1) % self.ckpt_every == 0):
+                self._checkpoint()
+                if self._preempted:
+                    log.warning("exiting after preemption checkpoint")
+                    break
+        else:
+            pass
+        if self.ckpt_dir:
+            self._checkpoint()
+        return {
+            "final_step": int(jax.device_get(self.state["step"])),
+            "stragglers_skipped": self.data.skipped,
+            "metrics": self.metrics_history,
+        }

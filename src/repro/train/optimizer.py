@@ -1,0 +1,162 @@
+"""Optimizers: AdamW (fp32 master + moments) and memory-lean Adafactor
+(factored second moment, no first moment, updates bf16 params in
+place) — the latter is what lets the 1T kimi-k2 config fit 512 v5e
+chips (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params) -> (params, state)
+    state_specs: Callable[[Any, Any], Any]  # (param_specs, params_shape) -> specs
+
+
+# ----------------------------------------------------------------------
+# AdamW
+# ----------------------------------------------------------------------
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    def init(params):
+        f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
+        zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), t)
+        return {
+            "m": zeros(params),
+            "v": zeros(params),
+            "master": f32(params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        b1t = 1 - b1 ** step.astype(jnp.float32)
+        b2t = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, master):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            u = (m2 / b1t) / (jnp.sqrt(v2 / b2t) + eps)
+            master2 = master - lr * (u + weight_decay * master)
+            return m2, v2, master2
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], state["master"])
+        m2 = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        v2 = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        master2 = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = jax.tree.map(
+            lambda mstr, p: mstr.astype(p.dtype), master2, params
+        )
+        return new_params, {"m": m2, "v": v2, "master": master2, "step": step}
+
+    def state_specs(param_specs, params_shape):
+        return {
+            "m": param_specs,
+            "v": param_specs,
+            "master": param_specs,
+            "step": P(),
+        }
+
+    return Optimizer(init, update, state_specs)
+
+
+# ----------------------------------------------------------------------
+# Adafactor (factored second moment, beta1=0, no master copy)
+# ----------------------------------------------------------------------
+def adafactor(lr: float = 1e-3, eps: float = 1e-30, clip: float = 1.0,
+              decay: float = 0.8) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def leaf(x):
+            if _factored(x.shape):
+                return {
+                    "vr": jnp.zeros(x.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(x.shape, jnp.float32)}
+
+        return {
+            "moments": jax.tree.map(leaf, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, mom, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(g.shape):
+                vr = beta * mom["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * mom["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.clip(vr.mean(axis=-1, keepdims=True), 1e-30)
+                vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+                u = g / jnp.sqrt(vhat + eps)
+                mom2 = {"vr": vr, "vc": vc}
+            else:
+                v = beta * mom["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(v + eps)
+                mom2 = {"v": v}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip)
+            p2 = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return p2, mom2
+
+        flat, tdef = jax.tree.flatten(params)
+        gflat = tdef.flatten_up_to(grads)
+        mflat = tdef.flatten_up_to(state["moments"])
+        out = [upd(g, m, p) for g, m, p in zip(gflat, mflat, flat)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_moments = tdef.unflatten([o[1] for o in out])
+        return new_params, {"moments": new_moments, "step": step}
+
+    def state_specs(param_specs, params_shape):
+        def leaf_spec(spec, shape):
+            if _factored(shape.shape):
+                return {
+                    "vr": P(*spec[: len(shape.shape) - 1]),
+                    "vc": P(*(list(spec[: len(shape.shape) - 2]) + [spec[len(shape.shape) - 1]]))
+                    if len(spec) >= len(shape.shape)
+                    else P(),
+                }
+            return {"v": P(*spec)}
+
+        def norm_spec(spec, shape):
+            s = tuple(spec) + (None,) * (len(shape.shape) - len(tuple(spec)))
+            return leaf_spec(s, shape)
+
+        return {
+            "moments": jax.tree.map(
+                norm_spec, param_specs, params_shape,
+                is_leaf=lambda x: isinstance(x, P),
+            ),
+            "step": P(),
+        }
+
+    return Optimizer(init, update, state_specs)
+
+
+def get_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return adamw()
+    if name == "adafactor":
+        return adafactor()
+    raise KeyError(name)

@@ -1,0 +1,60 @@
+"""The pjit-able training step: microbatched gradient accumulation
+(structured so XLA overlaps the grads' reduce-scatter of microbatch i
+with the compute of microbatch i+1), optimizer apply, loss metrics.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from .optimizer import get_optimizer
+
+
+def init_train_state(cfg: ModelConfig, key) -> Dict:
+    params = lm.init_params(cfg, key)
+    opt = get_optimizer(cfg.optimizer)
+    return {"params": params, "opt": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig):
+    opt = get_optimizer(cfg.optimizer)
+    gdt = jnp.dtype(cfg.grad_dtype)
+
+    def train_step(state: Dict, batch: Dict) -> Tuple[Dict, Dict]:
+        params = state["params"]
+        n_micro = cfg.microbatches
+
+        def split_mb(x):
+            return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+
+        mb = jax.tree.map(split_mb, batch)
+
+        def micro(g_acc, b):
+            (loss, aux), grads = jax.value_and_grad(
+                lambda p: lm.loss_fn(cfg, p, b), has_aux=True
+            )(params)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(gdt), g_acc, grads
+            )
+            return g_acc, loss
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+        g_sum, losses = jax.lax.scan(micro, g0, mb)
+        grads = jax.tree.map(lambda g: (g / n_micro).astype(jnp.float32), g_sum)
+        new_params, new_opt = opt.update(grads, state["opt"], params)
+        metrics = {
+            "loss": losses.mean(),
+            "grad_norm": jnp.sqrt(
+                sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+            ),
+        }
+        return (
+            {"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+            metrics,
+        )
+
+    return train_step

@@ -1,0 +1,24 @@
+"""x64 policy per test domain.
+
+The relational engine (repro.core) enables jax_enable_x64 at import —
+in production they live in separate processes (dataframe engine vs
+model/launch), but the test suite shares one.  This autouse fixture
+pins the flag per test file: dataframe tests run with x64 (exact int64
+keys), model/kernel/runtime tests run with JAX defaults, matching their
+deployment processes.
+"""
+import jax
+import pytest
+
+_X64_PREFIXES = ("test_core", "test_tpch", "test_tpcds")
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64_policy(request):
+    # module-scoped so it runs BEFORE other module-scoped fixtures
+    # (frames built in a module fixture must see the right flag)
+    path = getattr(request.node, "path", None) or request.node.fspath
+    fname = getattr(path, "name", None) or path.basename
+    want = any(str(fname).startswith(p) for p in _X64_PREFIXES)
+    jax.config.update("jax_enable_x64", want)
+    yield

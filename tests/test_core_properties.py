@@ -1,0 +1,119 @@
+"""Property-based tests: TensorFrame vs the independent oracle engine."""
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import TensorFrame, col
+from repro.core import oracle as orc
+
+SETTINGS = dict(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@st.composite
+def tables(draw, min_rows=0, max_rows=60):
+    n = draw(st.integers(min_rows, max_rows))
+    k_card = draw(st.integers(1, 8))
+    s_card = draw(st.integers(1, 6))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    return {
+        "k": rng.integers(-3, k_card, n),
+        "j": rng.integers(0, 4, n),
+        "s": rng.choice([f"s{i}" for i in range(s_card)], n).astype(object) if n else np.array([], dtype=object),
+        "v": np.round(rng.normal(size=n), 3),
+    }
+
+
+@given(tables(), st.integers(-3, 8))
+@settings(**SETTINGS)
+def test_filter_matches_oracle(data, thresh):
+    f = TensorFrame.from_arrays(data)
+    got = f.filter(col("k") > thresh)
+    mask = data["k"] > thresh
+    expect = orc.o_filter(orc.from_numpy(data), list(mask))
+    orc.assert_odf_equal(orc.frame_to_odf(got), expect)
+
+
+@given(tables(min_rows=1))
+@settings(**SETTINGS)
+def test_groupby_matches_oracle(data):
+    f = TensorFrame.from_arrays(data)
+    specs = [
+        ("n", "size", ""),
+        ("sv", "sum", "v"),
+        ("mn", "min", "k"),
+        ("mx", "max", "k"),
+        ("nu", "nunique", "j"),
+    ]
+    got = f.groupby(["s", "j"]).agg(specs)
+    expect = orc.o_groupby(orc.from_numpy(data), ["s", "j"], specs)
+    orc.assert_odf_equal(orc.frame_to_odf(got), expect, rtol=1e-6)
+
+
+@given(tables(min_rows=1))
+@settings(**SETTINGS)
+def test_groupby_partition_invariants(data):
+    """Groups partition the rows: sizes sum to n; sums are preserved."""
+    f = TensorFrame.from_arrays(data)
+    g = f.groupby(["k"]).agg([("n", "size", ""), ("sv", "sum", "v")])
+    assert int(np.sum(g.column("n"))) == f.nrows
+    np.testing.assert_allclose(
+        float(np.sum(g.column("sv"))), float(np.sum(data["v"])), rtol=1e-9
+    )
+    # distinct keys count matches numpy
+    assert g.nrows == len(np.unique(data["k"]))
+
+
+@given(tables(max_rows=40), tables(max_rows=40))
+@settings(**SETTINGS)
+def test_join_matches_oracle(left, right):
+    fl, fr = TensorFrame.from_arrays(left), TensorFrame.from_arrays(right)
+    for how in ("inner", "semi", "anti", "left"):
+        got = fl.join(fr, on=["k", "s"], how=how)
+        expect = orc.o_join(
+            orc.from_numpy(left), orc.from_numpy(right), ["k", "s"], ["k", "s"], how=how
+        )
+        orc.assert_odf_equal(orc.frame_to_odf(got), expect, rtol=1e-6)
+
+
+@given(tables(max_rows=40), tables(max_rows=40))
+@settings(**SETTINGS)
+def test_join_algorithms_agree(left, right):
+    """direct-address, sorted-probe and sort-merge produce identical bags."""
+    fl, fr = TensorFrame.from_arrays(left), TensorFrame.from_arrays(right)
+    outs = [
+        orc.frame_to_odf(fl.join(fr, on="j", algorithm=a))
+        for a in ("auto", "sorted", "sortmerge")
+    ]
+    orc.assert_odf_equal(outs[0], outs[1], rtol=1e-6)
+    orc.assert_odf_equal(outs[0], outs[2], rtol=1e-6)
+
+
+@given(tables(min_rows=2))
+@settings(**SETTINGS)
+def test_sort_is_stable_permutation(data):
+    f = TensorFrame.from_arrays(data)
+    got = f.sort_values(["j", "k"], ascending=[True, False])
+    # same multiset of rows
+    orc.assert_odf_equal(orc.frame_to_odf(got), orc.frame_to_odf(f), sort=True)
+    j = got.column("j")
+    assert all(j[i] <= j[i + 1] for i in range(len(j) - 1))
+    k = got.column("k")
+    for i in range(len(j) - 1):
+        if j[i] == j[i + 1]:
+            assert k[i] >= k[i + 1]
+
+
+@given(tables(min_rows=1))
+@settings(**SETTINGS)
+def test_composite_key_exactness(data):
+    """Packed composite keys are collision-free: group count equals the
+    true distinct tuple count."""
+    f = TensorFrame.from_arrays(data)
+    gb = f.groupby(["k", "j", "s"])
+    tuples = set(zip(data["k"], data["j"], data["s"]))
+    assert gb.ngroups == len(tuples)
+    assert gb.exact
