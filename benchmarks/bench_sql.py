@@ -1,0 +1,52 @@
+"""SQL front-end vs hand-written TensorFrame plans on TPC-H.
+
+Three timings per query:
+
+- ``handplan``  — the hand-translated ``tpch_frames`` plan (the paper's
+  Fig. 5/6 style),
+- ``sql``       — ``repro.sql.execute`` with the optimizer on,
+- ``sql_noopt`` — same SQL, optimizer off (filter pushdown, projection
+  pruning and constant folding disabled),
+
+so both the compilation overhead of the SQL layer (sql vs handplan)
+and the optimizer's pushdown win (sql_noopt vs sql) are measurable.
+"""
+from __future__ import annotations
+
+from .common import measure, report, tpch_frames
+
+
+QUICK_QUERIES = ("q1", "q3", "q6", "q14")
+
+
+def run(sf: float = 0.01, quick: bool = False):
+    from repro import sql
+    from repro.queries import tpch_frames as QF
+    from repro.queries.tpch_sql import TPCH_SQL
+
+    frames = tpch_frames(sf)
+    qnames = sorted(TPCH_SQL, key=lambda s: int(s[1:]))
+    if quick:
+        qnames = [q for q in qnames if q in QUICK_QUERIES]
+    repeats = 1 if quick else 3
+    for qname in qnames:
+        text = TPCH_SQL[qname]
+        t_hand = measure(
+            lambda: QF.ALL[qname](frames, sf=sf, apply_limit=False),
+            repeats=repeats,
+        )
+        t_sql = measure(lambda: sql.execute(text, frames), repeats=repeats)
+        t_noopt = measure(
+            lambda: sql.execute(text, frames, optimize=False), repeats=repeats
+        )
+        report(f"sql/{qname}/handplan", t_hand, f"sf={sf}")
+        report(f"sql/{qname}/sql", t_sql, f"vs_hand={t_sql / t_hand:.2f}x")
+        report(
+            f"sql/{qname}/sql_noopt",
+            t_noopt,
+            f"pushdown_speedup={t_noopt / t_sql:.2f}x",
+        )
+
+
+if __name__ == "__main__":
+    run(quick=True)

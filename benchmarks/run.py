@@ -29,6 +29,7 @@ def main() -> None:
         bench_operators,
         bench_roofline,
         bench_scaling,
+        bench_sql,
         bench_tpch,
         bench_tpcds,
     )
@@ -36,6 +37,7 @@ def main() -> None:
     suites = {
         "tpch": lambda: bench_tpch.run(sf=sf, quick=quick),
         "tpcds": lambda: bench_tpcds.run(sf=sf, quick=quick),
+        "sql": lambda: bench_sql.run(sf=sf, quick=quick),
         "operators": lambda: bench_operators.run(sf=sf, quick=quick),
         "scaling": lambda: bench_scaling.run(quick=quick),
         "compile": lambda: bench_compile.run(quick=quick),

@@ -1,0 +1,73 @@
+"""SQL front-end quickstart: query TensorFrames with plain SELECTs.
+
+    PYTHONPATH=src python examples/sql_quickstart.py
+"""
+import numpy as np
+
+from repro import sql
+from repro.core import TensorFrame
+from repro.queries import scope
+
+# ----------------------------------------------------------------------
+# 1. ad-hoc frames: the scope is just a dict of tables
+# ----------------------------------------------------------------------
+frames = {
+    "orders": TensorFrame.from_arrays(
+        {
+            "order_id": np.arange(8),
+            "customer": np.array(
+                ["ada", "bob", "ada", "cyd", "bob", "ada", "cyd", "bob"],
+                dtype=object,
+            ),
+            "amount": np.array([10.0, 20.0, 35.0, 5.0, 60.0, 12.0, 44.0, 3.0]),
+            "placed": np.array(
+                ["2024-01-05", "2024-01-07", "2024-02-01", "2024-02-03",
+                 "2024-02-11", "2024-03-02", "2024-03-09", "2024-03-15"],
+                dtype="datetime64[D]",
+            ),
+        }
+    ),
+    "customers": TensorFrame.from_arrays(
+        {
+            "name": np.array(["ada", "bob", "cyd"], dtype=object),
+            "region": np.array(["north", "south", "north"], dtype=object),
+        }
+    ),
+}
+
+query = """
+    SELECT region,
+           EXTRACT(MONTH FROM placed) AS month,
+           COUNT(*) AS orders,
+           SUM(amount) AS total
+    FROM orders, customers
+    WHERE customer = name AND amount BETWEEN 5 AND 50
+    GROUP BY region, month
+    HAVING SUM(amount) > 10
+    ORDER BY region, month
+"""
+
+print(sql.execute(query, frames).show())
+
+# ----------------------------------------------------------------------
+# 2. explain(): pre- vs post-optimization plans
+# ----------------------------------------------------------------------
+print()
+print(sql.explain(query, frames))
+
+# ----------------------------------------------------------------------
+# 3. registered scopes: benchmark tables by name
+# ----------------------------------------------------------------------
+tpch = scope("tpch", sf=0.001, seed=0)
+top = sql.execute(
+    """
+    SELECT l_returnflag, l_linestatus, SUM(l_quantity) AS sum_qty
+    FROM lineitem
+    WHERE l_shipdate <= DATE '1998-12-01' - INTERVAL '90' DAY
+    GROUP BY l_returnflag, l_linestatus
+    ORDER BY l_returnflag, l_linestatus
+    """,
+    tpch,
+)
+print()
+print(top.show())

@@ -10,7 +10,16 @@ _jax_config.update("jax_enable_x64", True)
 
 from .config import CONFIG, EngineConfig  # noqa: E402
 from .frame import TensorFrame, concat_rows  # noqa: E402
-from .expr import col, lit, d, if_else, udf  # noqa: E402
+from .expr import (  # noqa: E402
+    DateLit,
+    Expr,
+    col,
+    lit,
+    d,
+    if_else,
+    parse_date,
+    udf,
+)
 from .join import join  # noqa: E402
 from .io import read_csv, read_tfb, write_csv, write_tfb  # noqa: E402
 
@@ -19,10 +28,13 @@ __all__ = [
     "EngineConfig",
     "TensorFrame",
     "concat_rows",
+    "DateLit",
+    "Expr",
     "col",
     "lit",
     "d",
     "if_else",
+    "parse_date",
     "udf",
     "join",
     "read_csv",

@@ -117,6 +117,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool, extra: Dict[str, Any] | Non
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older JAX: one entry per computation
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     ha = hlo_analysis.analyze(hlo)
     coll = {k[len("coll_"):]: int(v) for k, v in ha.items() if k.startswith("coll_")}

@@ -1,4 +1,46 @@
 """TPC-H (all 22) and TPC-DS (5) queries, each in two independent
 implementations: the TensorFrame API (tpch_frames / tpcds_frames) and a
 row-at-a-time Python reference (tpch_numpy / tpcds_numpy) used for
-correctness testing."""
+correctness testing.  ``tpch_sql`` carries the SQL text of the queries
+expressible through the ``repro.sql`` front-end.
+
+This module is also the table registry for SQL scope lookup: benchmark
+table-sets are registered by name so ``repro.sql.execute(query,
+scope("tpch", sf=0.01))`` works without hand-assembling frame dicts.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+_SCOPE_LOADERS: Dict[str, Callable] = {}
+
+
+def register_scope(name: str, loader: Callable) -> None:
+    """Register a named table-set loader: ``loader(**kwargs) -> dict of
+    TensorFrames keyed by table name``."""
+    _SCOPE_LOADERS[name] = loader
+
+
+def scope(name: str, **kwargs):
+    """Build the named scope (e.g. ``scope("tpch", sf=0.01, seed=0)``)."""
+    if name not in _SCOPE_LOADERS:
+        raise KeyError(
+            f"unknown scope {name!r}; registered: {sorted(_SCOPE_LOADERS)}"
+        )
+    return _SCOPE_LOADERS[name](**kwargs)
+
+
+def _tpch_scope(sf: float = 0.01, seed: int = 0):
+    from repro.data import tpch
+
+    return tpch.as_frames(tpch.generate(sf=sf, seed=seed))
+
+
+def _tpcds_scope(sf: float = 0.01, seed: int = 1):
+    from repro.data import tpcds
+
+    return tpcds.as_frames(tpcds.generate(sf=sf, seed=seed))
+
+
+register_scope("tpch", _tpch_scope)
+register_scope("tpcds", _tpcds_scope)

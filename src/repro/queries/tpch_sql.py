@@ -1,0 +1,164 @@
+"""TPC-H queries as SQL text for the ``repro.sql`` front-end.
+
+Eleven of the 22 queries are expressible in the supported dialect
+(single SELECT block — no subqueries yet); the rest need correlated or
+scalar subqueries and stay hand-written in ``tpch_frames``.  Column
+aliases match the hand-written plans' output names so the differential
+tests can compare all three engines row-for-row.
+
+LIMIT clauses are omitted: sort ties make LIMIT non-deterministic
+across engines, and the reference tests compare full result sets
+(same convention as ``tpch_frames(..., apply_limit=False)``).
+"""
+from __future__ import annotations
+
+TPCH_SQL = {
+    "q1": """
+        SELECT l_returnflag, l_linestatus,
+               SUM(l_quantity) AS sum_qty,
+               SUM(l_extendedprice) AS sum_base_price,
+               SUM(l_extendedprice * (1 - l_discount)) AS sum_disc_price,
+               SUM(l_extendedprice * (1 - l_discount) * (1 + l_tax)) AS sum_charge,
+               AVG(l_quantity) AS avg_qty,
+               AVG(l_extendedprice) AS avg_price,
+               AVG(l_discount) AS avg_disc,
+               COUNT(*) AS count_order
+        FROM lineitem
+        WHERE l_shipdate <= DATE '1998-12-01' - INTERVAL '90' DAY
+        GROUP BY l_returnflag, l_linestatus
+        ORDER BY l_returnflag, l_linestatus
+    """,
+    "q3": """
+        SELECT l_orderkey, o_orderdate, o_shippriority,
+               SUM(l_extendedprice * (1 - l_discount)) AS revenue
+        FROM customer, orders, lineitem
+        WHERE c_mktsegment = 'BUILDING'
+          AND c_custkey = o_custkey AND l_orderkey = o_orderkey
+          AND o_orderdate < DATE '1995-03-15'
+          AND l_shipdate > DATE '1995-03-15'
+        GROUP BY l_orderkey, o_orderdate, o_shippriority
+        ORDER BY revenue DESC, o_orderdate
+    """,
+    "q5": """
+        SELECT n_name, SUM(l_extendedprice * (1 - l_discount)) AS revenue
+        FROM customer, orders, lineitem, supplier, nation, region
+        WHERE c_custkey = o_custkey AND l_orderkey = o_orderkey
+          AND l_suppkey = s_suppkey AND c_nationkey = s_nationkey
+          AND s_nationkey = n_nationkey AND n_regionkey = r_regionkey
+          AND r_name = 'ASIA'
+          AND o_orderdate >= DATE '1994-01-01'
+          AND o_orderdate < DATE '1995-01-01'
+        GROUP BY n_name
+        ORDER BY revenue DESC
+    """,
+    "q6": """
+        SELECT SUM(l_extendedprice * l_discount) AS revenue
+        FROM lineitem
+        WHERE l_shipdate >= DATE '1994-01-01'
+          AND l_shipdate < DATE '1994-01-01' + INTERVAL '365' DAY
+          AND l_discount BETWEEN 0.05 AND 0.07
+          AND l_quantity < 24
+    """,
+    "q7": """
+        SELECT n1.n_name AS supp_nation, n2.n_name AS cust_nation,
+               EXTRACT(YEAR FROM l_shipdate) AS l_year,
+               SUM(l_extendedprice * (1 - l_discount)) AS revenue
+        FROM supplier, lineitem, orders, customer, nation n1, nation n2
+        WHERE s_suppkey = l_suppkey AND o_orderkey = l_orderkey
+          AND c_custkey = o_custkey
+          AND s_nationkey = n1.n_nationkey AND c_nationkey = n2.n_nationkey
+          AND ((n1.n_name = 'FRANCE' AND n2.n_name = 'GERMANY')
+            OR (n1.n_name = 'GERMANY' AND n2.n_name = 'FRANCE'))
+          AND l_shipdate BETWEEN DATE '1995-01-01' AND DATE '1996-12-31'
+        GROUP BY supp_nation, cust_nation, l_year
+        ORDER BY supp_nation, cust_nation, l_year
+    """,
+    "q8": """
+        SELECT EXTRACT(YEAR FROM o_orderdate) AS o_year,
+               SUM(CASE WHEN n2.n_name = 'BRAZIL'
+                        THEN l_extendedprice * (1 - l_discount)
+                        ELSE 0.0 END)
+                 / SUM(l_extendedprice * (1 - l_discount)) AS mkt_share
+        FROM part, lineitem, orders, customer, nation n1, region, supplier,
+             nation n2
+        WHERE p_partkey = l_partkey AND o_orderkey = l_orderkey
+          AND c_custkey = o_custkey
+          AND n1.n_nationkey = c_nationkey AND r_regionkey = n1.n_regionkey
+          AND s_suppkey = l_suppkey AND n2.n_nationkey = s_nationkey
+          AND r_name = 'AMERICA' AND p_type = 'ECONOMY ANODIZED STEEL'
+          AND o_orderdate BETWEEN DATE '1995-01-01' AND DATE '1996-12-31'
+        GROUP BY o_year
+        ORDER BY o_year
+    """,
+    "q9": """
+        SELECT n_name, EXTRACT(YEAR FROM o_orderdate) AS o_year,
+               SUM(l_extendedprice * (1 - l_discount)
+                   - ps_supplycost * l_quantity) AS sum_profit
+        FROM part, supplier, lineitem, partsupp, orders, nation
+        WHERE s_suppkey = l_suppkey AND ps_suppkey = l_suppkey
+          AND ps_partkey = l_partkey AND p_partkey = l_partkey
+          AND o_orderkey = l_orderkey AND s_nationkey = n_nationkey
+          AND p_name LIKE '%green%'
+        GROUP BY n_name, o_year
+        ORDER BY n_name, o_year DESC
+    """,
+    "q10": """
+        SELECT o_custkey, c_name, c_acctbal, c_phone, n_name, c_address,
+               c_comment,
+               SUM(l_extendedprice * (1 - l_discount)) AS revenue
+        FROM customer, orders, lineitem, nation
+        WHERE c_custkey = o_custkey AND l_orderkey = o_orderkey
+          AND c_nationkey = n_nationkey
+          AND o_orderdate >= DATE '1993-10-01'
+          AND o_orderdate < DATE '1994-01-01'
+          AND l_returnflag = 'R'
+        GROUP BY o_custkey, c_name, c_acctbal, c_phone, n_name, c_address,
+                 c_comment
+        ORDER BY revenue DESC
+    """,
+    "q12": """
+        SELECT l_shipmode,
+               SUM(CASE WHEN o_orderpriority = '1-URGENT'
+                          OR o_orderpriority = '2-HIGH'
+                        THEN 1 ELSE 0 END) AS high_line_count,
+               SUM(CASE WHEN o_orderpriority <> '1-URGENT'
+                         AND o_orderpriority <> '2-HIGH'
+                        THEN 1 ELSE 0 END) AS low_line_count
+        FROM orders, lineitem
+        WHERE o_orderkey = l_orderkey AND l_shipmode IN ('MAIL', 'SHIP')
+          AND l_commitdate < l_receiptdate AND l_shipdate < l_commitdate
+          AND l_receiptdate >= DATE '1994-01-01'
+          AND l_receiptdate < DATE '1995-01-01'
+        GROUP BY l_shipmode
+        ORDER BY l_shipmode
+    """,
+    "q14": """
+        SELECT 100.00 * SUM(CASE WHEN p_type LIKE 'PROMO%'
+                                 THEN l_extendedprice * (1 - l_discount)
+                                 ELSE 0.0 END)
+               / SUM(l_extendedprice * (1 - l_discount)) AS promo_revenue
+        FROM lineitem, part
+        WHERE l_partkey = p_partkey
+          AND l_shipdate >= DATE '1995-09-01'
+          AND l_shipdate < DATE '1995-10-01'
+    """,
+    "q19": """
+        SELECT SUM(l_extendedprice * (1 - l_discount)) AS revenue
+        FROM lineitem, part
+        WHERE p_partkey = l_partkey
+          AND l_shipinstruct = 'DELIVER IN PERSON'
+          AND l_shipmode IN ('AIR', 'AIR REG')
+          AND ((p_brand = 'Brand#12'
+                AND p_container IN ('SM CASE', 'SM BOX', 'SM PACK', 'SM PKG')
+                AND l_quantity BETWEEN 1 AND 11 AND p_size BETWEEN 1 AND 5)
+            OR (p_brand = 'Brand#23'
+                AND p_container IN ('MED BAG', 'MED BOX', 'MED PKG', 'MED PACK')
+                AND l_quantity BETWEEN 10 AND 20 AND p_size BETWEEN 1 AND 10)
+            OR (p_brand = 'Brand#34'
+                AND p_container IN ('LG CASE', 'LG BOX', 'LG PACK', 'LG PKG')
+                AND l_quantity BETWEEN 20 AND 30 AND p_size BETWEEN 1 AND 15))
+    """,
+}
+
+# queries whose SQL form returns a single aggregate row
+SCALAR_SQL = {"q6", "q14", "q19"}

@@ -1,0 +1,68 @@
+"""SQL front-end over TensorFrame (framequery-style, Petersohn et al.).
+
+A declarative surface for the relational engine: ``SELECT`` text is
+tokenized and parsed (``parser``), compiled to a logical plan of
+dataclass nodes (``plan``), rewritten by a rule-based optimizer —
+constant folding, filter pushdown through joins, projection pruning
+(``optimize``) — and lowered onto the existing TensorFrame operators
+``filter``/``join``/``groupby``/``sort_values``/``with_column``
+(``lower``).  ``oracle_backend`` interprets the *unoptimized* plan
+row-at-a-time on ``repro.core.oracle`` for differential testing.
+
+Public API::
+
+    from repro import sql
+
+    out = sql.execute("SELECT a, SUM(b) AS s FROM t GROUP BY a", {"t": frame})
+    print(sql.explain("SELECT ...", {"t": frame}))
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from .parser import SqlError, parse
+from .plan import build_plan, format_plan
+from .optimize import optimize as _optimize
+from .lower import lower_plan, scope_frames
+
+__all__ = [
+    "SqlError",
+    "execute",
+    "explain",
+    "parse",
+    "plan_query",
+]
+
+
+def plan_query(query: str, scope: Dict, *, optimized: bool = True):
+    """Parse + plan (+ optionally optimize) ``query`` against ``scope``.
+
+    ``scope`` maps table name -> TensorFrame (or dict of numpy arrays);
+    only column names are consulted here, so either works.
+    """
+    frames = scope_frames(scope)
+    catalog = {name: list(f.column_names) for name, f in frames.items()}
+    plan = build_plan(parse(query), catalog)
+    return _optimize(plan) if optimized else plan
+
+
+def execute(query: str, scope: Dict, *, optimize: bool = True):
+    """Run a SQL ``SELECT`` over a scope of TensorFrames.
+
+    Returns a TensorFrame (aggregate-only queries yield one row).
+    """
+    frames = scope_frames(scope)
+    plan = plan_query(query, frames, optimized=optimize)
+    return lower_plan(plan, frames)
+
+
+def explain(query: str, scope: Dict) -> str:
+    """Pre- and post-optimization logical plans, as printable text."""
+    naive = plan_query(query, scope, optimized=False)
+    opt = _optimize(naive)
+    return (
+        "== logical plan ==\n"
+        + format_plan(naive)
+        + "\n== optimized plan ==\n"
+        + format_plan(opt)
+    )

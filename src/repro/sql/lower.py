@@ -1,0 +1,224 @@
+"""Lower the logical plan onto TensorFrame operators.
+
+Plan nodes map 1:1 onto the engine: Scan -> select+rename, Filter ->
+``filter``, Join -> ``join``, Aggregate -> ``with_column`` (expression
+materialization) + ``groupby``/``agg``, Project -> ``with_column`` +
+``select``/``rename``, Sort -> ``sort_values``, Limit -> ``head``.
+
+SQL expressions translate to the core trait-based ``Expr`` combinators,
+so evaluation inherits every engine fast path (dictionary LUTs, packed
+string kernels, fused arithmetic).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import TensorFrame, col, if_else, lit
+from repro.core.expr import DateLit, Expr
+
+from .parser import (
+    SqlError,
+    SBetween,
+    SBin,
+    SCase,
+    SCmp,
+    SCol,
+    SDate,
+    SExtract,
+    SFunc,
+    SIn,
+    SInterval,
+    SIsNull,
+    SLike,
+    SLit,
+    SNot,
+    SOr,
+    SAnd,
+    format_expr,
+)
+from .plan import Aggregate, Filter, Join, Limit, Project, Scan, Sort
+
+
+def scope_frames(scope: Dict) -> Dict[str, TensorFrame]:
+    """Accept TensorFrames or raw dict-of-numpy tables in the scope."""
+    out = {}
+    for name, obj in scope.items():
+        if isinstance(obj, TensorFrame):
+            out[name] = obj
+        elif isinstance(obj, dict):
+            out[name] = TensorFrame.from_arrays(obj)
+        else:
+            raise SqlError(
+                f"scope entry {name!r} must be a TensorFrame or a dict of "
+                f"numpy arrays, not {type(obj).__name__}"
+            )
+    return out
+
+
+# ----------------------------------------------------------------------
+# expression translation
+# ----------------------------------------------------------------------
+_CMP_OPS = {
+    "=": lambda a, b: a == b,
+    "<>": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+_BIN_OPS = {
+    "+": lambda a, b: a + b,
+    "-": lambda a, b: a - b,
+    "*": lambda a, b: a * b,
+    "/": lambda a, b: a / b,
+}
+
+_SCALAR_FNS = ("abs", "sqrt", "floor", "exp", "log", "sin", "cos")
+
+
+def _literal_value(e):
+    if isinstance(e, SLit):
+        return e.value
+    if isinstance(e, SDate):
+        return int(e.days)
+    raise SqlError(f"IN list supports only literals, got {format_expr(e)}")
+
+
+def to_expr(e) -> Expr:
+    """SQL expression AST -> core trait Expr."""
+    if isinstance(e, SCol):
+        return col(e.internal)
+    if isinstance(e, SLit):
+        if e.value is None:
+            raise SqlError("bare NULL literal is not supported here")
+        return lit(e.value)
+    if isinstance(e, SDate):
+        return DateLit(e.days)
+    if isinstance(e, SInterval):
+        return lit(e.days)
+    if isinstance(e, SBin):
+        return _BIN_OPS[e.op](to_expr(e.a), to_expr(e.b))
+    if isinstance(e, SCmp):
+        return _CMP_OPS[e.op](to_expr(e.a), to_expr(e.b))
+    if isinstance(e, SAnd):
+        return to_expr(e.a) & to_expr(e.b)
+    if isinstance(e, SOr):
+        return to_expr(e.a) | to_expr(e.b)
+    if isinstance(e, SNot):
+        return ~to_expr(e.a)
+    if isinstance(e, SIn):
+        out = to_expr(e.e).isin([_literal_value(v) for v in e.values])
+        return ~out if e.negated else out
+    if isinstance(e, SBetween):
+        out = to_expr(e.e).between(to_expr(e.lo), to_expr(e.hi))
+        return ~out if e.negated else out
+    if isinstance(e, SLike):
+        out = to_expr(e.e).str.like(e.pattern)
+        return ~out if e.negated else out
+    if isinstance(e, SIsNull):
+        out = to_expr(e.e).is_null()
+        return ~out if e.negated else out
+    if isinstance(e, SCase):
+        if e.default == SLit(None):
+            raise SqlError("CASE requires an ELSE branch")
+        acc = to_expr(e.default)
+        for cond, res in reversed(e.whens):
+            acc = if_else(to_expr(cond), to_expr(res), acc)
+        return acc
+    if isinstance(e, SExtract):
+        dt = to_expr(e.e).dt
+        return {"year": dt.year, "month": dt.month, "day": dt.day}[e.field]()
+    if isinstance(e, SFunc):
+        if e.is_aggregate:
+            raise SqlError(
+                f"aggregate {e.name.upper()} outside GROUP BY context"
+            )
+        if e.name in _SCALAR_FNS and len(e.args) == 1:
+            return getattr(to_expr(e.args[0]), e.name)()
+        raise SqlError(f"unsupported function {e.name.upper()}")
+    raise SqlError(f"cannot lower expression {format_expr(e)}")
+
+
+# ----------------------------------------------------------------------
+# plan lowering
+# ----------------------------------------------------------------------
+def lower_plan(node, frames: Dict[str, TensorFrame]) -> TensorFrame:
+    if isinstance(node, Scan):
+        try:
+            f = frames[node.table]
+        except KeyError:
+            raise SqlError(
+                f"table {node.table!r} missing from scope; have "
+                f"{sorted(frames)}"
+            ) from None
+        f = f.select(list(node.columns))
+        return f.rename({c: f"{node.alias}.{c}" for c in node.columns})
+    if isinstance(node, Filter):
+        return lower_plan(node.child, frames).filter(to_expr(node.pred))
+    if isinstance(node, Join):
+        left = lower_plan(node.left, frames)
+        right = lower_plan(node.right, frames)
+        return left.join(
+            right,
+            left_on=list(node.left_keys),
+            right_on=list(node.right_keys),
+            how=node.how,
+        )
+    if isinstance(node, Aggregate):
+        return _lower_aggregate(node, lower_plan(node.child, frames))
+    if isinstance(node, Project):
+        return _lower_project(node, lower_plan(node.child, frames))
+    if isinstance(node, Sort):
+        f = lower_plan(node.child, frames)
+        return f.sort_values([n for n, _ in node.keys], [a for _, a in node.keys])
+    if isinstance(node, Limit):
+        return lower_plan(node.child, frames).head(node.n)
+    raise TypeError(f"unknown plan node {type(node).__name__}")
+
+
+def _lower_aggregate(node: Aggregate, f: TensorFrame) -> TensorFrame:
+    key_names: List[str] = []
+    for name, e in node.keys:
+        if not (isinstance(e, SCol) and e.internal == name and f.has_column(name)):
+            f = f.with_column(name, to_expr(e))
+        key_names.append(name)
+    specs = []
+    for name, fn, e in node.aggs:
+        if fn == "size":
+            specs.append((name, "size", ""))
+            continue
+        if isinstance(e, SCol) and f.has_column(e.internal):
+            colname = e.internal
+        else:
+            colname = f"__in.{name}"
+            f = f.with_column(colname, to_expr(e))
+        specs.append((name, fn, colname))
+    if key_names:
+        return f.groupby(key_names).agg(specs)
+    scalars = f.agg(specs)
+    return TensorFrame.from_arrays(
+        {name: np.asarray([scalars[name]]) for name, _, _ in specs}
+    )
+
+
+def _lower_project(node: Project, f: TensorFrame) -> TensorFrame:
+    srcs: List[str] = []
+    mapping: Dict[str, str] = {}
+    used = set()
+    for i, (name, e) in enumerate(node.outputs):
+        if (
+            isinstance(e, SCol)
+            and f.has_column(e.internal)
+            and e.internal not in used
+        ):
+            src = e.internal
+        else:
+            src = f"__o.{i}.{name}"
+            f = f.with_column(src, to_expr(e))
+        used.add(src)
+        srcs.append(src)
+        mapping[src] = name
+    return f.select(srcs).rename(mapping)

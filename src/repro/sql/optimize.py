@@ -1,0 +1,301 @@
+"""Rule-based plan optimizer.
+
+Three rewrites, applied in order:
+
+1. **Constant folding** — literal arithmetic/comparisons and
+   DATE +/- INTERVAL collapse at plan time, so e.g. TPC-H Q1's
+   ``DATE '1998-12-01' - INTERVAL '90' DAY`` becomes one date literal
+   and Q6's ``0.06 - 0.01`` bounds become plain numbers.
+2. **Filter pushdown** — the planner leaves one big Filter above the
+   join tree; this rule splits it into conjuncts and pushes each as far
+   down as its columns allow: through inner joins to either side,
+   through left joins to the left (probe) side only, and through
+   aggregates when a conjunct touches only plain group-key columns.
+   Single-table predicates end up directly above their Scan, shrinking
+   every join build/probe input (Flare's plan-level pushdown).
+3. **Projection pruning** — a top-down required-column pass narrows
+   every Scan to the columns the query actually touches, so joins
+   materialize fewer columns and offloaded strings stay offloaded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Set
+
+from .parser import (
+    SAnd,
+    SBin,
+    SCase,
+    SCmp,
+    SCol,
+    SDate,
+    SInterval,
+    SLit,
+    SNot,
+    SOr,
+    conjoin,
+    expr_columns,
+    split_conjuncts,
+    transform,
+)
+from .plan import (
+    Aggregate,
+    Filter,
+    Join,
+    Limit,
+    Project,
+    Scan,
+    Sort,
+    node_columns,
+)
+
+
+def optimize(plan):
+    """fold constants -> push filters -> prune projections."""
+    plan = fold_constants(plan)
+    plan = push_filters(plan)
+    plan = prune_projections(plan)
+    return plan
+
+
+# ----------------------------------------------------------------------
+# rule 1: constant folding
+# ----------------------------------------------------------------------
+_ARITH = {
+    "+": lambda a, b: a + b,
+    "-": lambda a, b: a - b,
+    "*": lambda a, b: a * b,
+    "/": lambda a, b: a / b,
+}
+_CMP = {
+    "=": lambda a, b: a == b,
+    "<>": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+def _is_num_lit(e) -> bool:
+    return isinstance(e, SLit) and isinstance(e.value, (int, float)) and not isinstance(e.value, bool)
+
+
+def _days(e) -> Optional[int]:
+    if isinstance(e, (SDate, SInterval)):
+        return e.days
+    if isinstance(e, SLit) and isinstance(e.value, int) and not isinstance(e.value, bool):
+        return e.value
+    return None
+
+
+def fold_expr_node(n):
+    """One-step fold of a node whose children are already folded."""
+    if isinstance(n, SBin):
+        a, b = n.a, n.b
+        if _is_num_lit(a) and _is_num_lit(b):
+            if n.op == "/" and b.value == 0:
+                return n
+            return SLit(_ARITH[n.op](a.value, b.value))
+        if isinstance(a, SDate) and n.op in ("+", "-"):
+            nb = _days(b)
+            if nb is not None and not isinstance(b, SDate):
+                return SDate(a.days + nb if n.op == "+" else a.days - nb)
+            if isinstance(b, SDate) and n.op == "-":
+                return SLit(a.days - b.days)
+        if isinstance(b, SDate) and n.op == "+":
+            na = _days(a)
+            if na is not None and not isinstance(a, SDate):
+                return SDate(b.days + na)
+        if isinstance(a, SInterval) and isinstance(b, SInterval):
+            return SInterval(a.days + b.days if n.op == "+" else a.days - b.days)
+    elif isinstance(n, SCmp):
+        a, b = n.a, n.b
+        if _is_num_lit(a) and _is_num_lit(b):
+            return SLit(bool(_CMP[n.op](a.value, b.value)))
+        if isinstance(a, SDate) and isinstance(b, SDate):
+            return SLit(bool(_CMP[n.op](a.days, b.days)))
+        if (
+            isinstance(a, SLit) and isinstance(b, SLit)
+            and isinstance(a.value, str) and isinstance(b.value, str)
+        ):
+            return SLit(bool(_CMP[n.op](a.value, b.value)))
+    elif isinstance(n, SAnd):
+        if n.a == SLit(True):
+            return n.b
+        if n.b == SLit(True):
+            return n.a
+        if SLit(False) in (n.a, n.b):
+            return SLit(False)
+    elif isinstance(n, SOr):
+        if n.a == SLit(False):
+            return n.b
+        if n.b == SLit(False):
+            return n.a
+        if SLit(True) in (n.a, n.b):
+            return SLit(True)
+    elif isinstance(n, SNot):
+        if isinstance(n.a, SLit) and isinstance(n.a.value, bool):
+            return SLit(not n.a.value)
+    elif isinstance(n, SCase):
+        # drop WHEN branches with constant-false conditions
+        whens = tuple((c, r) for c, r in n.whens if c != SLit(False))
+        if whens != n.whens:
+            if not whens:
+                return n.default
+            return SCase(whens, n.default)
+    return n
+
+
+def fold_expr(e):
+    return transform(e, fold_expr_node)
+
+
+def fold_constants(node):
+    """Fold every expression embedded in the plan."""
+    if isinstance(node, Filter):
+        return Filter(fold_constants(node.child), fold_expr(node.pred))
+    if isinstance(node, Project):
+        return Project(
+            fold_constants(node.child),
+            tuple((n, fold_expr(e)) for n, e in node.outputs),
+        )
+    if isinstance(node, Aggregate):
+        return Aggregate(
+            fold_constants(node.child),
+            tuple((n, fold_expr(e)) for n, e in node.keys),
+            tuple(
+                (n, fn, fold_expr(e) if e is not None else None)
+                for n, fn, e in node.aggs
+            ),
+        )
+    if isinstance(node, Join):
+        return dataclasses.replace(
+            node, left=fold_constants(node.left), right=fold_constants(node.right)
+        )
+    if isinstance(node, (Sort, Limit)):
+        return dataclasses.replace(node, child=fold_constants(node.child))
+    return node
+
+
+# ----------------------------------------------------------------------
+# rule 2: filter pushdown
+# ----------------------------------------------------------------------
+def push_filters(node):
+    if isinstance(node, Filter):
+        conjuncts = split_conjuncts(node.pred)
+        child = node.child
+        # merge stacked filters before pushing
+        while isinstance(child, Filter):
+            conjuncts += split_conjuncts(child.pred)
+            child = child.child
+        conjuncts = [c for c in conjuncts if c != SLit(True)]
+        if not conjuncts:
+            return push_filters(child)
+        return _push_into(child, conjuncts)
+    if isinstance(node, Join):
+        return dataclasses.replace(
+            node, left=push_filters(node.left), right=push_filters(node.right)
+        )
+    if isinstance(node, (Project, Aggregate, Sort, Limit)):
+        return dataclasses.replace(node, child=push_filters(node.child))
+    return node
+
+
+def _push_into(child, conjuncts):
+    """Push a list of conjuncts into ``child``; returns the new subtree
+    (residual conjuncts wrap it in a Filter)."""
+    if isinstance(child, Join):
+        lcols, rcols = node_columns(child.left), node_columns(child.right)
+        to_left, to_right, stay = [], [], []
+        for c in conjuncts:
+            cols = expr_columns(c)
+            if cols <= lcols:
+                to_left.append(c)
+            elif cols <= rcols and child.how == "inner":
+                to_right.append(c)
+            else:
+                stay.append(c)
+        left = Filter(child.left, conjoin(to_left)) if to_left else child.left
+        right = Filter(child.right, conjoin(to_right)) if to_right else child.right
+        out = Join(
+            push_filters(left),
+            push_filters(right),
+            child.left_keys,
+            child.right_keys,
+            child.how,
+        )
+        return Filter(out, conjoin(stay)) if stay else out
+    if isinstance(child, Aggregate):
+        # a conjunct over plain-column group keys commutes with grouping
+        plain_keys = {
+            n for n, e in child.keys if isinstance(e, SCol) and e.internal == n
+        }
+        below, stay = [], []
+        for c in conjuncts:
+            (below if expr_columns(c) <= plain_keys else stay).append(c)
+        out = child
+        if below:
+            out = dataclasses.replace(
+                child, child=Filter(child.child, conjoin(below))
+            )
+        out = dataclasses.replace(out, child=push_filters(out.child))
+        return Filter(out, conjoin(stay)) if stay else out
+    child = push_filters(child)
+    return Filter(child, conjoin(conjuncts))
+
+
+# ----------------------------------------------------------------------
+# rule 3: projection pruning
+# ----------------------------------------------------------------------
+def prune_projections(node, required: Optional[Set[str]] = None):
+    """Narrow Scans to the columns actually referenced above them.
+
+    ``required=None`` means "everything" (the root, and below nodes that
+    need their child intact)."""
+    if isinstance(node, Project):
+        need = set()
+        for _, e in node.outputs:
+            need |= expr_columns(e)
+        return Project(prune_projections(node.child, need), node.outputs)
+    if isinstance(node, (Sort, Limit)):
+        return dataclasses.replace(
+            node, child=prune_projections(node.child, required)
+        )
+    if isinstance(node, Filter):
+        need = None if required is None else required | expr_columns(node.pred)
+        return Filter(prune_projections(node.child, need), node.pred)
+    if isinstance(node, Aggregate):
+        need = set()
+        for _, e in node.keys:
+            need |= expr_columns(e)
+        for _, _, e in node.aggs:
+            if e is not None:
+                need |= expr_columns(e)
+        return dataclasses.replace(
+            node, child=prune_projections(node.child, need)
+        )
+    if isinstance(node, Join):
+        need = (
+            None
+            if required is None
+            else required | set(node.left_keys) | set(node.right_keys)
+        )
+        lcols, rcols = node_columns(node.left), node_columns(node.right)
+        lneed = None if need is None else need & lcols
+        rneed = None if need is None else need & rcols
+        return Join(
+            prune_projections(node.left, lneed),
+            prune_projections(node.right, rneed),
+            node.left_keys,
+            node.right_keys,
+            node.how,
+        )
+    if isinstance(node, Scan):
+        if required is None:
+            return node
+        keep = tuple(
+            c for c in node.columns if f"{node.alias}.{c}" in required
+        )
+        return dataclasses.replace(node, columns=keep)
+    raise TypeError(f"unknown plan node {type(node).__name__}")

@@ -1,0 +1,206 @@
+"""Row-at-a-time plan interpreter over ``repro.core.oracle``.
+
+Runs the (by default unoptimized) logical plan on the independent
+oracle engine: Python lists, per-row expression evaluation, None as
+NULL.  Used by the differential tests as the third leg of the
+SQL-vs-hand-written-vs-oracle comparison — it shares the parser/planner
+with the TensorFrame path but none of the execution machinery, so a
+lowering or optimizer bug shows up as a mismatch.
+"""
+from __future__ import annotations
+
+import datetime
+import math
+import re
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import oracle as orc
+
+from .parser import (
+    SqlError,
+    SAnd,
+    SBetween,
+    SBin,
+    SCase,
+    SCmp,
+    SCol,
+    SDate,
+    SExtract,
+    SFunc,
+    SIn,
+    SInterval,
+    SIsNull,
+    SLike,
+    SLit,
+    SNot,
+    SOr,
+    format_expr,
+)
+from .plan import Aggregate, Filter, Join, Limit, Project, Scan, Sort
+
+_EPOCH = datetime.date(1970, 1, 1)
+
+
+def _like_rx(pattern: str) -> "re.Pattern":
+    parts = []
+    for ch in pattern:
+        if ch == "%":
+            parts.append(".*")
+        elif ch == "_":
+            parts.append(".")
+        else:
+            parts.append(re.escape(ch))
+    return re.compile("".join(parts), flags=re.S)
+
+
+def _truthy(v) -> bool:
+    return bool(v) if v is not None else False
+
+
+def eval_row(e, row: dict):
+    """Evaluate a SQL expression on one row dict (None = NULL)."""
+    if isinstance(e, SCol):
+        return row[e.internal]
+    if isinstance(e, SLit):
+        return e.value
+    if isinstance(e, (SDate, SInterval)):
+        return e.days
+    if isinstance(e, SBin):
+        a, b = eval_row(e.a, row), eval_row(e.b, row)
+        if a is None or b is None:
+            return None
+        if e.op == "+":
+            return a + b
+        if e.op == "-":
+            return a - b
+        if e.op == "*":
+            return a * b
+        return a / b
+    if isinstance(e, SCmp):
+        a, b = eval_row(e.a, row), eval_row(e.b, row)
+        if a is None or b is None:
+            return None
+        return {
+            "=": a == b, "<>": a != b, "<": a < b,
+            "<=": a <= b, ">": a > b, ">=": a >= b,
+        }[e.op]
+    if isinstance(e, SAnd):
+        return _truthy(eval_row(e.a, row)) and _truthy(eval_row(e.b, row))
+    if isinstance(e, SOr):
+        return _truthy(eval_row(e.a, row)) or _truthy(eval_row(e.b, row))
+    if isinstance(e, SNot):
+        return not _truthy(eval_row(e.a, row))
+    if isinstance(e, SIn):
+        v = eval_row(e.e, row)
+        if v is None:
+            return None
+        hit = v in tuple(eval_row(x, row) for x in e.values)
+        return (not hit) if e.negated else hit
+    if isinstance(e, SBetween):
+        v = eval_row(e.e, row)
+        lo, hi = eval_row(e.lo, row), eval_row(e.hi, row)
+        if v is None or lo is None or hi is None:
+            return None
+        hit = lo <= v <= hi
+        return (not hit) if e.negated else hit
+    if isinstance(e, SLike):
+        v = eval_row(e.e, row)
+        if v is None:
+            return None
+        hit = bool(_like_rx(e.pattern).fullmatch(str(v)))
+        return (not hit) if e.negated else hit
+    if isinstance(e, SIsNull):
+        v = eval_row(e.e, row)
+        null = v is None or (isinstance(v, float) and math.isnan(v))
+        return (not null) if e.negated else null
+    if isinstance(e, SCase):
+        for cond, res in e.whens:
+            if _truthy(eval_row(cond, row)):
+                return eval_row(res, row)
+        return eval_row(e.default, row)
+    if isinstance(e, SExtract):
+        v = eval_row(e.e, row)
+        if v is None:
+            return None
+        day = _EPOCH + datetime.timedelta(days=int(v))
+        return {"year": day.year, "month": day.month, "day": day.day}[e.field]
+    if isinstance(e, SFunc):
+        if e.is_aggregate:
+            raise SqlError("aggregate evaluated outside Aggregate node")
+        v = eval_row(e.args[0], row)
+        if v is None:
+            return None
+        fns = {
+            "abs": abs, "sqrt": math.sqrt, "floor": math.floor,
+            "exp": math.exp, "log": math.log, "sin": math.sin, "cos": math.cos,
+        }
+        if e.name not in fns:
+            raise SqlError(f"unsupported function {e.name.upper()}")
+        return fns[e.name](v)
+    raise SqlError(f"oracle backend cannot evaluate {format_expr(e)}")
+
+
+def _rows(df: orc.ODF) -> List[dict]:
+    names = list(df)
+    return [
+        {k: df[k][i] for k in names} for i in range(orc.nrows(df))
+    ]
+
+
+def execute_oracle(plan, tables: Dict[str, Dict[str, np.ndarray]]) -> orc.ODF:
+    """Interpret a logical plan on raw numpy tables via the oracle."""
+    if isinstance(plan, Scan):
+        if plan.table not in tables:
+            raise SqlError(f"table {plan.table!r} missing from scope")
+        raw = tables[plan.table]
+        df = orc.from_numpy({c: raw[c] for c in plan.columns})
+        return {f"{plan.alias}.{c}": v for c, v in df.items()}
+    if isinstance(plan, Filter):
+        df = execute_oracle(plan.child, tables)
+        mask = [_truthy(eval_row(plan.pred, r)) for r in _rows(df)]
+        return orc.o_filter(df, mask)
+    if isinstance(plan, Join):
+        left = execute_oracle(plan.left, tables)
+        right = execute_oracle(plan.right, tables)
+        return orc.o_join(
+            left, right, list(plan.left_keys), list(plan.right_keys),
+            how=plan.how,
+        )
+    if isinstance(plan, Aggregate):
+        df = execute_oracle(plan.child, tables)
+        rows = _rows(df)
+        work: orc.ODF = {}
+        for name, e in plan.keys:
+            work[name] = [eval_row(e, r) for r in rows]
+        specs = []
+        for name, fn, e in plan.aggs:
+            if fn == "size":
+                specs.append((name, "size", ""))
+                continue
+            work[name + ".__in"] = [eval_row(e, r) for r in rows]
+            specs.append((name, fn, name + ".__in"))
+        keys = [n for n, _ in plan.keys]
+        if keys:
+            return orc.o_groupby(work, keys, specs)
+        out: orc.ODF = {}
+        for name, fn, cn in specs:
+            v = orc._agg_one(work[cn] if cn else [1] * len(rows), fn)
+            if v is None and fn == "sum":
+                v = 0.0  # engine (pandas) semantics for empty SUM
+            out[name] = [v]
+        return out
+    if isinstance(plan, Project):
+        df = execute_oracle(plan.child, tables)
+        rows = _rows(df)
+        return {name: [eval_row(e, r) for r in rows] for name, e in plan.outputs}
+    if isinstance(plan, Sort):
+        df = execute_oracle(plan.child, tables)
+        return orc.o_sort(
+            df, [n for n, _ in plan.keys], [a for _, a in plan.keys]
+        )
+    if isinstance(plan, Limit):
+        df = execute_oracle(plan.child, tables)
+        return orc.o_take(df, range(min(plan.n, orc.nrows(df))))
+    raise TypeError(f"unknown plan node {type(plan).__name__}")

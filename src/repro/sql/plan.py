@@ -1,0 +1,542 @@
+"""Logical plan: dataclass nodes + the planner (AST -> naive plan).
+
+The planner is deliberately naive — it resolves names, builds the join
+tree from equi-join predicates, and stacks the remaining WHERE
+conjuncts as ONE Filter above the joins.  All pushdown/pruning smarts
+live in ``optimize``; ``explain()`` shows the difference.
+
+Internal column naming: every scanned column is qualified as
+``alias.column`` so self-joins (``nation n1, nation n2``) never
+collide.  Post-aggregate columns use reserved ``__agg_<i>`` /
+``__key_<i>`` names; ``SCol("", name)`` refers to such an internal
+output column verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .parser import (
+    FromItem,
+    SqlError,
+    SCol,
+    SFunc,
+    SStar,
+    Select,
+    conjoin,
+    expr_columns,
+    format_expr,
+    split_conjuncts,
+    transform,
+    SCmp,
+)
+
+
+# ----------------------------------------------------------------------
+# plan nodes
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Scan:
+    table: str
+    alias: str
+    columns: Tuple[str, ...]  # unqualified physical columns to load
+
+
+@dataclasses.dataclass(frozen=True)
+class Filter:
+    child: object
+    pred: object
+
+
+@dataclasses.dataclass(frozen=True)
+class Join:
+    left: object
+    right: object
+    left_keys: Tuple[str, ...]  # internal (qualified) names
+    right_keys: Tuple[str, ...]
+    how: str = "inner"
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregate:
+    child: object
+    keys: Tuple[Tuple[str, object], ...]  # (out_name, expr)
+    aggs: Tuple[Tuple[str, str, object], ...]  # (out_name, fn, expr|None)
+
+
+@dataclasses.dataclass(frozen=True)
+class Project:
+    child: object
+    outputs: Tuple[Tuple[str, object], ...]  # (out_name, expr)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sort:
+    child: object
+    keys: Tuple[Tuple[str, bool], ...]  # (output column, ascending)
+
+
+@dataclasses.dataclass(frozen=True)
+class Limit:
+    child: object
+    n: int
+
+
+def node_columns(node) -> set:
+    """Internal column names produced by a plan node."""
+    if isinstance(node, Scan):
+        return {f"{node.alias}.{c}" for c in node.columns}
+    if isinstance(node, Join):
+        return node_columns(node.left) | node_columns(node.right)
+    if isinstance(node, Aggregate):
+        return {n for n, _ in node.keys} | {n for n, _, _ in node.aggs}
+    if isinstance(node, Project):
+        return {n for n, _ in node.outputs}
+    if isinstance(node, (Filter, Sort, Limit)):
+        return node_columns(node.child)
+    raise TypeError(f"unknown plan node {type(node).__name__}")
+
+
+# ----------------------------------------------------------------------
+# name resolution
+# ----------------------------------------------------------------------
+class _Resolver:
+    def __init__(self, aliases: Dict[str, str], catalog: Dict[str, List[str]]):
+        self.aliases = aliases  # alias -> table name
+        self.catalog = catalog
+
+    def resolve_col(self, c: SCol) -> SCol:
+        if c.table == "":  # already-internal reference
+            return c
+        if c.table is not None:
+            if c.table not in self.aliases:
+                raise SqlError(
+                    f"unknown table or alias {c.table!r}; "
+                    f"in scope: {sorted(self.aliases)}"
+                )
+            cols = self.catalog[self.aliases[c.table]]
+            if c.name not in cols:
+                raise SqlError(
+                    f"unknown column {c.name!r} in table "
+                    f"{self.aliases[c.table]!r} (alias {c.table!r}); "
+                    f"it has: {cols}"
+                )
+            return c
+        hits = [
+            a for a, t in self.aliases.items() if c.name in self.catalog[t]
+        ]
+        if not hits:
+            raise SqlError(
+                f"unknown column {c.name!r}; no table in scope has it "
+                f"(tables: {sorted(set(self.aliases.values()))})"
+            )
+        if len(hits) > 1:
+            raise SqlError(
+                f"ambiguous column {c.name!r}: present in aliases {sorted(hits)}; "
+                f"qualify it"
+            )
+        return SCol(hits[0], c.name)
+
+    def resolve(self, e):
+        return transform(
+            e, lambda n: self.resolve_col(n) if isinstance(n, SCol) else n
+        )
+
+
+def _replace_subexpr(e, target, replacement):
+    """Top-down replacement of a whole subexpression."""
+    if e == target:
+        return replacement
+    if not dataclasses.is_dataclass(e):
+        return e
+    changes = {}
+    for f in dataclasses.fields(e):
+        v = getattr(e, f.name)
+        if dataclasses.is_dataclass(v):
+            nv = _replace_subexpr(v, target, replacement)
+        elif isinstance(v, tuple):
+            nv = tuple(
+                _replace_subexpr(x, target, replacement)
+                if dataclasses.is_dataclass(x)
+                else (
+                    tuple(
+                        _replace_subexpr(s, target, replacement)
+                        if dataclasses.is_dataclass(s)
+                        else s
+                        for s in x
+                    )
+                    if isinstance(x, tuple)
+                    else x
+                )
+                for x in v
+            )
+        else:
+            nv = v
+        if nv != v:
+            changes[f.name] = nv
+    return dataclasses.replace(e, **changes) if changes else e
+
+
+# ----------------------------------------------------------------------
+# planner
+# ----------------------------------------------------------------------
+def build_plan(sel: Select, catalog: Dict[str, List[str]]):
+    """Compile a parsed SELECT into the naive logical plan."""
+    items = list(sel.from_items) + [j.item for j in sel.joins]
+    aliases: Dict[str, str] = {}
+    for item in items:
+        if item.table not in catalog:
+            raise SqlError(
+                f"unknown table {item.table!r}; scope has "
+                f"{sorted(catalog)}"
+            )
+        if item.alias in aliases:
+            raise SqlError(f"duplicate table alias {item.alias!r}")
+        aliases[item.alias] = item.table
+    res = _Resolver(aliases, catalog)
+
+    # ---- classify WHERE conjuncts ----
+    equi: List[SCmp] = []  # cross-alias equality -> join key candidates
+    residual: List[object] = []
+    if sel.where is not None:
+        for c in split_conjuncts(res.resolve(sel.where)):
+            if _is_equi(c):
+                equi.append(c)
+            else:
+                residual.append(c)
+
+    # ---- join tree: FROM list greedily, then explicit JOINs in order ----
+    plan, joined = _scan(sel.from_items[0], catalog), {sel.from_items[0].alias}
+    pending = list(sel.from_items[1:])
+    while pending:
+        progress = False
+        for item in list(pending):
+            keys = _take_link_preds(equi, joined, item.alias)
+            if keys:
+                plan = Join(
+                    plan,
+                    _scan(item, catalog),
+                    tuple(k for k, _ in keys),
+                    tuple(k for _, k in keys),
+                    "inner",
+                )
+                joined.add(item.alias)
+                pending.remove(item)
+                progress = True
+        if not progress:
+            stuck = [i.alias for i in pending]
+            raise SqlError(
+                f"no equi-join predicate connects table(s) {stuck} to the "
+                f"rest of the FROM list; cross joins are not supported"
+            )
+    for jc in sel.joins:
+        on = res.resolve(jc.on)
+        keys, extra = [], []
+        for c in split_conjuncts(on):
+            if _is_equi(c) and _links(c, joined, jc.item.alias):
+                keys.append(_orient(c, joined))
+            else:
+                extra.append(c)
+        if not keys:
+            raise SqlError(
+                f"JOIN {jc.item.table} ON clause has no equi-join predicate "
+                f"linking it to the tables already joined"
+            )
+        right = _scan(jc.item, catalog)
+        if jc.how == "left" and extra:
+            # For LEFT JOIN, ON residuals restrict which right rows
+            # MATCH (failed matches NULL-extend, they don't drop the
+            # left row), so hoisting them into WHERE would silently
+            # turn the join inner.  Right-side-only conjuncts are
+            # equivalent to pre-filtering the right input; anything
+            # touching the left side cannot be expressed that way.
+            rcols = node_columns(right)
+            bad = [c for c in extra if not expr_columns(c) <= rcols]
+            if bad:
+                raise SqlError(
+                    f"LEFT JOIN {jc.item.table} ON supports extra "
+                    f"conditions only on the joined (right) table's "
+                    f"columns; move {format_expr(bad[0])} to WHERE if "
+                    f"inner-join semantics are intended"
+                )
+            right = Filter(right, conjoin(extra))
+            extra = []
+        plan = Join(
+            plan,
+            right,
+            tuple(k for k, _ in keys),
+            tuple(k for _, k in keys),
+            jc.how,
+        )
+        joined.add(jc.item.alias)
+        residual.extend(extra)
+    # leftover equi predicates link already-joined aliases (e.g. TPC-H Q5's
+    # c_nationkey = s_nationkey): plain filters
+    residual.extend(equi)
+    if residual:
+        plan = Filter(plan, conjoin(residual))
+
+    # ---- projection / aggregation ----
+    select_items: List[Tuple[object, Optional[str]]] = []
+    for e, alias in sel.columns:
+        if isinstance(e, SStar):
+            for a in (i.alias for i in items):
+                for cname in catalog[aliases[a]]:
+                    select_items.append((SCol(a, cname), cname))
+        else:
+            select_items.append((res.resolve(e), alias))
+    sel_aliases = {a: e for e, a in select_items if a is not None}
+
+    has_agg = bool(sel.group_by) or any(
+        _has_aggregate(e) for e, _ in select_items
+    ) or (sel.having is not None)
+
+    order_rewrite = None
+    if has_agg:
+        plan, outputs, order_rewrite = _plan_aggregate(
+            sel, res, plan, select_items, sel_aliases
+        )
+    else:
+        if sel.having is not None:
+            raise SqlError("HAVING requires GROUP BY or aggregates")
+        outputs = []
+        for e, alias in select_items:
+            name = alias or (e.name if isinstance(e, SCol) else None)
+            if name is None:
+                raise SqlError(
+                    f"computed select column {format_expr(e)} needs an AS alias"
+                )
+            outputs.append((name, e))
+    names = [n for n, _ in outputs]
+    dup = {n for n in names if names.count(n) > 1}
+    if dup:
+        raise SqlError(f"duplicate output column name(s) {sorted(dup)}")
+    plan = Project(plan, tuple(outputs))
+
+    # ---- order by / limit over the OUTPUT columns ----
+    if sel.order_by:
+        skeys = []
+        for e, asc in sel.order_by:
+            skeys.append((_output_name_for(e, outputs, res, order_rewrite), asc))
+        plan = Sort(plan, tuple(skeys))
+    if sel.limit is not None:
+        plan = Limit(plan, sel.limit)
+    return plan
+
+
+def _scan(item: FromItem, catalog) -> Scan:
+    return Scan(item.table, item.alias, tuple(catalog[item.table]))
+
+
+def _is_equi(c) -> bool:
+    return (
+        isinstance(c, SCmp)
+        and c.op == "="
+        and isinstance(c.a, SCol)
+        and isinstance(c.b, SCol)
+        and c.a.table != c.b.table
+    )
+
+
+def _links(c: SCmp, joined: set, new_alias: str) -> bool:
+    sides = {c.a.table, c.b.table}
+    return new_alias in sides and bool((sides - {new_alias}) & joined)
+
+
+def _orient(c: SCmp, joined: set) -> Tuple[str, str]:
+    """(left_key, right_key) with left on the already-joined side."""
+    if c.a.table in joined:
+        return (c.a.internal, c.b.internal)
+    return (c.b.internal, c.a.internal)
+
+
+def _take_link_preds(equi: List[SCmp], joined: set, new_alias: str):
+    keys = []
+    for c in list(equi):
+        if _links(c, joined, new_alias):
+            keys.append(_orient(c, joined))
+            equi.remove(c)
+    return keys
+
+
+def _has_aggregate(e) -> bool:
+    from .parser import walk
+
+    return any(isinstance(n, SFunc) and n.is_aggregate for n in walk(e))
+
+
+_AGG_FN = {"sum": "sum", "avg": "mean", "min": "min", "max": "max"}
+
+
+def _plan_aggregate(sel, res, plan, select_items, sel_aliases):
+    # group keys: bare select-alias refs expand to the aliased expression
+    keys: List[Tuple[str, object]] = []
+    for i, g in enumerate(sel.group_by):
+        if isinstance(g, SCol) and g.table is None and g.name in sel_aliases:
+            ge = sel_aliases[g.name]
+        else:
+            ge = res.resolve(g)
+        name = ge.internal if isinstance(ge, SCol) else f"__key_{i}"
+        keys.append((name, ge))
+
+    aggs: List[Tuple[str, str, object]] = []
+    agg_map: Dict[SFunc, str] = {}
+
+    def lift_agg(fn_call: SFunc) -> SCol:
+        if fn_call not in agg_map:
+            name = f"__agg_{len(agg_map)}"
+            agg_map[fn_call] = name
+            if fn_call.name == "count":
+                if len(fn_call.args) != 1:
+                    raise SqlError("COUNT takes one argument")
+                arg = fn_call.args[0]
+                if isinstance(arg, SStar):
+                    aggs.append((name, "size", None))
+                elif fn_call.distinct:
+                    aggs.append((name, "nunique", arg))
+                else:
+                    aggs.append((name, "count", arg))
+            else:
+                if fn_call.distinct:
+                    raise SqlError(
+                        f"DISTINCT is only supported inside COUNT, not "
+                        f"{fn_call.name.upper()}"
+                    )
+                if len(fn_call.args) != 1:
+                    raise SqlError(f"{fn_call.name.upper()} takes one argument")
+                aggs.append((name, _AGG_FN[fn_call.name], fn_call.args[0]))
+        return SCol("", agg_map[fn_call])
+
+    def rewrite(e):
+        # replace group-key subexpressions first (top-down), then lift
+        # aggregate calls
+        for kname, kexpr in keys:
+            e = _replace_subexpr(e, kexpr, SCol("", kname))
+        return transform(
+            e,
+            lambda n: lift_agg(n)
+            if isinstance(n, SFunc) and n.is_aggregate
+            else n,
+        )
+
+    outputs = []
+    for e, alias in select_items:
+        re_ = rewrite(e)
+        name = alias or (
+            e.name if isinstance(e, SCol) else None
+        )
+        if name is None:
+            raise SqlError(
+                f"computed select column {format_expr(e)} needs an AS alias"
+            )
+        _check_grouped(re_, keys, f"select column {name!r}")
+        outputs.append((name, re_))
+
+    having = None
+    if sel.having is not None:
+        hv = sel.having
+        # HAVING may reference select aliases
+        for a, ae in sel_aliases.items():
+            hv = _replace_subexpr(hv, SCol(None, a), ae)
+        having = rewrite(res.resolve(hv))
+        _check_grouped(having, keys, "HAVING")
+
+    plan = Aggregate(plan, tuple(keys), tuple(aggs))
+    if having is not None:
+        plan = Filter(plan, having)
+
+    def order_rewrite(e):
+        # Same key/agg substitution the select list got, for ORDER BY
+        # matching — but the Aggregate node is already built, so an
+        # aggregate call NOT in the select list cannot be added here.
+        n_before = len(agg_map)
+        out = rewrite(e)
+        if len(agg_map) != n_before:
+            raise SqlError(
+                f"ORDER BY aggregate {format_expr(e)} must also appear "
+                f"in the select list"
+            )
+        return out
+
+    return plan, outputs, order_rewrite
+
+
+def _check_grouped(e, keys, where: str):
+    key_names = {n for n, _ in keys}
+    for c in expr_columns(e):
+        if c.startswith("__agg_") or c in key_names:
+            continue
+        raise SqlError(
+            f"column {c!r} in {where} must appear in GROUP BY or inside "
+            f"an aggregate function"
+        )
+
+
+def _output_name_for(e, outputs, res, rewrite=None) -> str:
+    out_names = {n for n, _ in outputs}
+    if isinstance(e, SCol) and e.table is None and e.name in out_names:
+        return e.name
+    re_ = res.resolve(e)
+    if rewrite is not None:
+        re_ = rewrite(re_)
+    for name, oe in outputs:
+        if oe == re_:
+            return name
+    raise SqlError(
+        f"ORDER BY expression {format_expr(e)} must be a select-list "
+        f"column or alias (have {sorted(out_names)})"
+    )
+
+
+# ----------------------------------------------------------------------
+# explain formatting
+# ----------------------------------------------------------------------
+def format_plan(node, indent: int = 0) -> str:
+    pad = "  " * indent
+    if isinstance(node, Scan):
+        cols = ", ".join(node.columns)
+        tag = node.table if node.alias == node.table else f"{node.table} {node.alias}"
+        return f"{pad}Scan {tag} [{cols}]"
+    if isinstance(node, Filter):
+        return (
+            f"{pad}Filter {format_expr(node.pred)}\n"
+            + format_plan(node.child, indent + 1)
+        )
+    if isinstance(node, Join):
+        on = ", ".join(
+            f"{l} = {r}" for l, r in zip(node.left_keys, node.right_keys)
+        )
+        return (
+            f"{pad}Join {node.how} on [{on}]\n"
+            + format_plan(node.left, indent + 1)
+            + "\n"
+            + format_plan(node.right, indent + 1)
+        )
+    if isinstance(node, Aggregate):
+        keys = ", ".join(
+            n if isinstance(e, SCol) else f"{n}={format_expr(e)}"
+            for n, e in node.keys
+        )
+        aggs = ", ".join(
+            f"{n}={fn.upper()}({format_expr(e) if e is not None else '*'})"
+            for n, fn, e in node.aggs
+        )
+        return (
+            f"{pad}Aggregate keys=[{keys}] aggs=[{aggs}]\n"
+            + format_plan(node.child, indent + 1)
+        )
+    if isinstance(node, Project):
+        outs = ", ".join(
+            n
+            if isinstance(e, SCol)
+            and (e.internal == n or e.internal.endswith("." + n))
+            else f"{n}={format_expr(e)}"
+            for n, e in node.outputs
+        )
+        return f"{pad}Project [{outs}]\n" + format_plan(node.child, indent + 1)
+    if isinstance(node, Sort):
+        keys = ", ".join(f"{n} {'ASC' if a else 'DESC'}" for n, a in node.keys)
+        return f"{pad}Sort [{keys}]\n" + format_plan(node.child, indent + 1)
+    if isinstance(node, Limit):
+        return f"{pad}Limit {node.n}\n" + format_plan(node.child, indent + 1)
+    raise TypeError(f"unknown plan node {type(node).__name__}")

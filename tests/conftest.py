@@ -10,7 +10,33 @@ deployment processes.
 import jax
 import pytest
 
-_X64_PREFIXES = ("test_core", "test_tpch", "test_tpcds")
+_X64_PREFIXES = ("test_core", "test_tpch", "test_tpcds", "test_sql")
+
+
+def pytest_configure(config):
+    # Registered here as well as pyproject.toml so a bare `pytest
+    # tests/` from any rootdir still knows the marker.
+    config.addinivalue_line(
+        "markers",
+        "slow: full-scale TPC-H/TPC-DS sweeps and other long-running "
+        "tests (deselected by default; run with -m 'slow or not slow')",
+    )
+
+
+@pytest.fixture(scope="session")
+def tpch_small():
+    """Shared SF=0.002 TPC-H data: (raw tables, TensorFrames).
+
+    Session-scoped so test_tpch_queries and test_sql build the frames
+    once.  Session fixtures instantiate BEFORE the module-scoped
+    _x64_policy fixture, so enable x64 here explicitly — the frames
+    carry exact int64 keys.  Only x64 modules may request it."""
+    jax.config.update("jax_enable_x64", True)
+    from repro.data import tpch
+
+    tables = tpch.generate(sf=0.002, seed=42)
+    frames = tpch.as_frames(tables)
+    return tables, frames
 
 
 @pytest.fixture(autouse=True, scope="module")

@@ -1,5 +1,13 @@
-"""Property-based tests: TensorFrame vs the independent oracle engine."""
+"""Property-based tests: TensorFrame vs the independent oracle engine.
+
+Requires the optional ``hypothesis`` dev dependency (see
+requirements-dev.txt); skips cleanly when it is absent so the tier-1
+``-x`` run never dies at collection.
+"""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

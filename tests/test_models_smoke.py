@@ -11,6 +11,25 @@ from repro.configs import ARCHS, get
 from repro.models import lm
 from repro.models.config import reduced
 
+# Big/exotic configs cost several seconds of CPU compile each; the
+# default (tier-1) run keeps one representative per family and the
+# rest go to the slow lane (`-m "slow or not slow"`).
+HEAVY_ARCHS = {
+    "dbrx-132b",
+    "zamba2-2.7b",
+    "llama-3.2-vision-90b",
+    "rwkv6-7b",
+    "kimi-k2-1t-a32b",
+    "command-r-35b",
+}
+
+
+def _arch_params(archs=None):
+    return [
+        a if a not in HEAVY_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+        for a in (archs or ARCHS)
+    ]
+
 
 def make_batch(cfg, B=2, S=32, seed=0):
     rng = np.random.default_rng(seed)
@@ -29,7 +48,7 @@ def make_batch(cfg, B=2, S=32, seed=0):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params())
 def test_forward_and_grad(arch):
     cfg = reduced(get(arch))
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
@@ -47,7 +66,7 @@ def test_forward_and_grad(arch):
     assert any(float(jnp.abs(g).max()) > 0 for g in leaves), f"{arch}: all-zero grads"
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params())
 def test_decode_step_shapes(arch):
     cfg = reduced(get(arch))
     params = lm.init_params(cfg, jax.random.PRNGKey(1))
@@ -68,7 +87,14 @@ def test_decode_step_shapes(arch):
     assert int(state3["pos"]) == 2
 
 
-@pytest.mark.parametrize("arch", ["qwen3-14b", "phi3-mini-3.8b", "musicgen-medium"])
+@pytest.mark.parametrize(
+    "arch",
+    [
+        "phi3-mini-3.8b",
+        pytest.param("qwen3-14b", marks=pytest.mark.slow),
+        pytest.param("musicgen-medium", marks=pytest.mark.slow),
+    ],
+)
 def test_decode_matches_forward(arch):
     """Greedy decode logits must match teacher-forced forward logits."""
     cfg = reduced(get(arch))
@@ -89,6 +115,7 @@ def test_decode_matches_forward(arch):
     np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_rwkv_decode_matches_forward():
     cfg = reduced(get("rwkv6-7b"))
     params = lm.init_params(cfg, jax.random.PRNGKey(4))
@@ -104,6 +131,7 @@ def test_rwkv_decode_matches_forward():
     np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=5e-4, atol=5e-4)
 
 
+@pytest.mark.slow
 def test_zamba_decode_matches_forward():
     cfg = reduced(get("zamba2-2.7b"))
     params = lm.init_params(cfg, jax.random.PRNGKey(6))

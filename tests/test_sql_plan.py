@@ -1,0 +1,512 @@
+"""Unit tests for the SQL front-end: tokenizer/parser, planner name
+resolution (incl. error messages), each optimizer rule, and explain()
+snapshots.  Pure plan-level tests — tiny frames only, no TPC data."""
+import numpy as np
+import pytest
+
+from repro.core import TensorFrame
+from repro import sql
+from repro.sql.parser import (
+    SqlError,
+    SAnd,
+    SBetween,
+    SBin,
+    SCase,
+    SCmp,
+    SCol,
+    SDate,
+    SExtract,
+    SFunc,
+    SIn,
+    SLike,
+    SLit,
+    SNot,
+    SOr,
+    parse,
+)
+from repro.sql.optimize import fold_expr, optimize
+from repro.sql.plan import (
+    Aggregate,
+    Filter,
+    Join,
+    Limit,
+    Project,
+    Scan,
+    Sort,
+    build_plan,
+    format_plan,
+)
+
+
+# ----------------------------------------------------------------------
+# fixtures: a tiny catalog/scope
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def scope():
+    return {
+        "emp": TensorFrame.from_arrays(
+            {
+                "id": np.arange(6),
+                "dept": np.array(list("abacba"), dtype=object),
+                "sal": np.array([10.0, 20.0, 30.0, 40.0, 50.0, 60.0]),
+                "hired": np.array(
+                    ["2020-01-01", "2021-06-01", "2020-03-01", "2022-01-01",
+                     "2021-01-01", "2020-06-15"],
+                    dtype="datetime64[D]",
+                ),
+            }
+        ),
+        "dept": TensorFrame.from_arrays(
+            {
+                "name": np.array(list("abc"), dtype=object),
+                "loc": np.array(["x", "y", "x"], dtype=object),
+                "budget": np.array([100.0, 200.0, 300.0]),
+            }
+        ),
+    }
+
+
+CATALOG = {
+    "emp": ["id", "dept", "sal", "hired"],
+    "dept": ["name", "loc", "budget"],
+}
+
+
+# ----------------------------------------------------------------------
+# tokenizer / parser
+# ----------------------------------------------------------------------
+def test_parse_basic_select():
+    ast = parse("SELECT a, b AS bee FROM t WHERE a > 1 ORDER BY a DESC LIMIT 3")
+    assert ast.columns == ((SCol(None, "a"), None), (SCol(None, "b"), "bee"))
+    assert ast.from_items[0].table == "t"
+    assert ast.where == SCmp(">", SCol(None, "a"), SLit(1))
+    assert ast.order_by == ((SCol(None, "a"), False),)
+    assert ast.limit == 3
+
+
+def test_parse_precedence_and_or():
+    ast = parse("SELECT a FROM t WHERE a = 1 OR b = 2 AND c = 3")
+    # AND binds tighter than OR
+    assert isinstance(ast.where, SOr)
+    assert isinstance(ast.where.b, SAnd)
+
+
+def test_parse_arith_precedence():
+    ast = parse("SELECT a + b * c AS x FROM t")
+    e = ast.columns[0][0]
+    assert e == SBin("+", SCol(None, "a"), SBin("*", SCol(None, "b"), SCol(None, "c")))
+
+
+def test_parse_predicates():
+    ast = parse(
+        "SELECT a FROM t WHERE a IN (1, 2) AND b NOT LIKE 'x%' "
+        "AND c BETWEEN 1 AND 5 AND d IS NOT NULL AND NOT e = 1"
+    )
+    conj = ast.where
+    from repro.sql.parser import split_conjuncts
+
+    parts = split_conjuncts(conj)
+    assert parts[0] == SIn(SCol(None, "a"), (SLit(1), SLit(2)))
+    assert parts[1] == SLike(SCol(None, "b"), "x%", negated=True)
+    assert parts[2] == SBetween(SCol(None, "c"), SLit(1), SLit(5))
+    assert parts[3].negated and parts[3].e == SCol(None, "d")
+    assert parts[4] == SNot(SCmp("=", SCol(None, "e"), SLit(1)))
+
+
+def test_parse_case_extract_date():
+    ast = parse(
+        "SELECT CASE WHEN a = 1 THEN 2 ELSE 0 END AS c, "
+        "EXTRACT(YEAR FROM d) AS y, DATE '1994-01-01' AS t0 FROM t"
+    )
+    c, y, t0 = (e for e, _ in ast.columns)
+    assert isinstance(c, SCase) and c.whens[0][1] == SLit(2)
+    assert y == SExtract("year", SCol(None, "d"))
+    assert t0 == SDate(int(np.datetime64("1994-01-01").astype(np.int64)))
+
+
+def test_parse_agg_distinct_and_star():
+    ast = parse("SELECT COUNT(*) AS n, COUNT(DISTINCT a) AS u, SUM(b) AS s FROM t")
+    n, u, s = (e for e, _ in ast.columns)
+    assert n.name == "count" and u.distinct and s == SFunc("sum", (SCol(None, "b"),))
+
+
+def test_parse_joins():
+    ast = parse(
+        "SELECT a FROM t LEFT JOIN u ON t.k = u.k JOIN v ON v.j = t.j"
+    )
+    assert ast.joins[0].how == "left" and ast.joins[1].how == "inner"
+    assert ast.joins[0].item.table == "u"
+
+
+def test_parse_string_escapes_and_comments():
+    ast = parse("SELECT a FROM t -- trailing comment\nWHERE b = 'it''s'")
+    assert ast.where == SCmp("=", SCol(None, "b"), SLit("it's"))
+
+
+@pytest.mark.parametrize(
+    "bad, msg",
+    [
+        ("SELECT", "expected an expression"),
+        ("SELECT a", "expected FROM"),
+        ("SELECT a FROM t WHERE", "expected an expression"),
+        ("SELECT a FROM t GROUP a", "expected BY"),
+        ("SELECT a FROM t LIMIT x", "LIMIT expects an integer"),
+        ("SELECT a FROM t; DROP TABLE t", "unexpected character"),
+        ("SELECT a FROM t extra garbage (", "trailing input"),
+        ("SELECT MAX(*) AS m FROM t", "MAX(*) is not supported"),
+        (
+            "SELECT a FROM t WHERE d < DATE '1993-10-01' + INTERVAL '3' MONTH",
+            "INTERVAL ... MONTH is not supported",
+        ),
+    ],
+)
+def test_parse_errors(bad, msg):
+    with pytest.raises(SqlError) as ei:
+        parse(bad)
+    assert msg in str(ei.value)
+
+
+# ----------------------------------------------------------------------
+# planner: resolution + errors
+# ----------------------------------------------------------------------
+def test_unknown_table_message():
+    with pytest.raises(SqlError) as ei:
+        build_plan(parse("SELECT x FROM nosuch"), CATALOG)
+    assert "unknown table 'nosuch'" in str(ei.value)
+    assert "emp" in str(ei.value)  # lists what IS in scope
+
+
+def test_unknown_column_message():
+    with pytest.raises(SqlError) as ei:
+        build_plan(parse("SELECT wages FROM emp"), CATALOG)
+    assert "unknown column 'wages'" in str(ei.value)
+
+
+def test_unknown_qualified_column_message():
+    with pytest.raises(SqlError) as ei:
+        build_plan(parse("SELECT e.wages FROM emp e"), CATALOG)
+    msg = str(ei.value)
+    assert "unknown column 'wages'" in msg and "'emp'" in msg
+
+
+def test_ambiguous_column_message():
+    cat = {"a": ["k", "v"], "b": ["k", "w"]}
+    with pytest.raises(SqlError) as ei:
+        build_plan(parse("SELECT k FROM a, b WHERE v = w"), cat)
+    assert "ambiguous column 'k'" in str(ei.value)
+
+
+def test_cross_join_rejected():
+    with pytest.raises(SqlError) as ei:
+        build_plan(parse("SELECT id FROM emp, dept"), CATALOG)
+    assert "cross joins" in str(ei.value)
+
+
+def test_ungrouped_column_rejected():
+    with pytest.raises(SqlError) as ei:
+        build_plan(
+            parse("SELECT sal, COUNT(*) AS n FROM emp GROUP BY dept"), CATALOG
+        )
+    assert "must appear in GROUP BY" in str(ei.value)
+
+
+def test_order_by_must_be_in_select():
+    with pytest.raises(SqlError) as ei:
+        build_plan(
+            parse("SELECT dept FROM emp ORDER BY sal"), CATALOG
+        )
+    assert "ORDER BY" in str(ei.value)
+
+
+def test_self_join_aliases_resolve():
+    plan = build_plan(
+        parse(
+            "SELECT e1.id AS a, e2.id AS b FROM emp e1, emp e2 "
+            "WHERE e1.dept = e2.dept"
+        ),
+        CATALOG,
+    )
+    txt = format_plan(plan)
+    assert "emp e1" in txt and "emp e2" in txt
+    assert "e1.dept = e2.dept" in txt
+
+
+# ----------------------------------------------------------------------
+# optimizer rule 1: constant folding
+# ----------------------------------------------------------------------
+def test_fold_arith_and_cmp():
+    assert fold_expr(SBin("+", SLit(5), SLit(10))) == SLit(15)
+    assert fold_expr(SBin("*", SLit(2.0), SBin("-", SLit(1), SLit(0.5)))) == SLit(1.0)
+    assert fold_expr(SCmp("<", SLit(1), SLit(2))) == SLit(True)
+
+
+def test_fold_date_interval():
+    from repro.sql.parser import SInterval
+
+    d0 = SDate(int(np.datetime64("1998-12-01").astype(np.int64)))
+    folded = fold_expr(SBin("-", d0, SInterval(90)))
+    assert folded == SDate(int(np.datetime64("1998-09-02").astype(np.int64)))
+    # date - date -> day count
+    d1 = SDate(d0.days - 7)
+    assert fold_expr(SBin("-", d0, d1)) == SLit(7)
+
+
+def test_fold_bool_shortcuts():
+    x = SCmp("=", SCol("t", "a"), SLit(1))
+    assert fold_expr(SAnd(SLit(True), x)) == x
+    assert fold_expr(SAnd(SLit(False), x)) == SLit(False)
+    assert fold_expr(SOr(x, SLit(False))) == x
+    assert fold_expr(SNot(SLit(False))) == SLit(True)
+    # dead CASE branch elimination
+    c = SCase(((SCmp("<", SLit(2), SLit(1)), SLit(10)),), SLit(0))
+    assert fold_expr(c) == SLit(0)
+
+
+def test_fold_inside_plan_via_explain(scope):
+    txt = sql.explain(
+        "SELECT id FROM emp WHERE hired < DATE '2021-01-01' + INTERVAL '31' DAY "
+        "AND sal > 10 + 5",
+        scope,
+    )
+    opt = txt.split("== optimized plan ==")[1]
+    assert "DATE '2021-02-01'" in opt
+    assert "> 15" in opt
+    # the naive plan still shows the raw expressions
+    naive = txt.split("== optimized plan ==")[0]
+    assert "INTERVAL 31 DAY" in naive
+
+
+# ----------------------------------------------------------------------
+# optimizer rule 2: filter pushdown
+# ----------------------------------------------------------------------
+def _tree(node, kinds=()):
+    """Flatten the plan tree into [(depth, node)] for shape asserts."""
+    out = []
+
+    def rec(n, d):
+        out.append((d, n))
+        for attr in ("child", "left", "right"):
+            c = getattr(n, attr, None)
+            if c is not None:
+                rec(c, d + 1)
+
+    rec(node, 0)
+    return out
+
+
+def test_filter_pushdown_below_join(scope):
+    plan = sql.plan_query(
+        "SELECT id FROM emp, dept WHERE dept = name AND loc = 'x' AND sal > 15",
+        scope,
+    )
+    nodes = _tree(plan)
+    # each single-table predicate must now sit directly above its Scan
+    filters = [(d, n) for d, n in nodes if isinstance(n, Filter)]
+    assert len(filters) == 2
+    for _, f in filters:
+        assert isinstance(f.child, Scan)
+    by_table = {f.child.table: f for _, f in filters}
+    assert "sal" in format_plan(by_table["emp"]).splitlines()[0]
+    assert "loc" in format_plan(by_table["dept"]).splitlines()[0]
+
+
+def test_filter_pushdown_keeps_cross_table_pred_above(scope):
+    plan = sql.plan_query(
+        "SELECT id FROM emp, dept WHERE dept = name AND sal > budget",
+        scope,
+    )
+    # sal > budget references both sides: must stay above the Join
+    assert isinstance(plan, Project)
+    assert isinstance(plan.child, Filter)
+    assert isinstance(plan.child.child, Join)
+
+
+def test_filter_not_pushed_to_right_of_left_join(scope):
+    plan = sql.plan_query(
+        "SELECT id FROM emp LEFT JOIN dept ON dept = name WHERE loc = 'x'",
+        scope,
+    )
+    # predicate on the null-extended side must NOT cross the left join
+    assert isinstance(plan, Project)
+    f = plan.child
+    assert isinstance(f, Filter) and isinstance(f.child, Join)
+    assert f.child.how == "left"
+
+
+def test_having_on_group_key_pushed_below_aggregate(scope):
+    plan = sql.plan_query(
+        "SELECT dept, COUNT(*) AS n FROM emp GROUP BY dept HAVING dept <> 'c'",
+        scope,
+    )
+    # the key-only HAVING conjunct commutes with grouping
+    agg = plan.child
+    assert isinstance(agg, Aggregate)
+    assert isinstance(agg.child, Filter)
+    assert isinstance(agg.child.child, Scan)
+
+
+def test_having_on_aggregate_stays_above(scope):
+    plan = sql.plan_query(
+        "SELECT dept, SUM(sal) AS s FROM emp GROUP BY dept HAVING SUM(sal) > 50",
+        scope,
+    )
+    assert isinstance(plan, Project)
+    assert isinstance(plan.child, Filter)
+    assert isinstance(plan.child.child, Aggregate)
+
+
+# ----------------------------------------------------------------------
+# optimizer rule 3: projection pruning
+# ----------------------------------------------------------------------
+def test_projection_pruning_narrows_scans(scope):
+    plan = sql.plan_query(
+        "SELECT loc, SUM(sal) AS s FROM emp, dept WHERE dept = name GROUP BY loc",
+        scope,
+    )
+    scans = {n.table: n for _, n in _tree(plan) if isinstance(n, Scan)}
+    assert scans["emp"].columns == ("dept", "sal")  # id, hired pruned
+    assert scans["dept"].columns == ("name", "loc")  # budget pruned
+
+
+def test_unoptimized_scans_keep_all_columns(scope):
+    plan = sql.plan_query(
+        "SELECT loc, SUM(sal) AS s FROM emp, dept WHERE dept = name GROUP BY loc",
+        scope,
+        optimized=False,
+    )
+    scans = {n.table: n for _, n in _tree(plan) if isinstance(n, Scan)}
+    assert scans["emp"].columns == ("id", "dept", "sal", "hired")
+    assert scans["dept"].columns == ("name", "loc", "budget")
+
+
+# ----------------------------------------------------------------------
+# explain snapshot: stable plan rendering
+# ----------------------------------------------------------------------
+def test_explain_snapshot(scope):
+    txt = sql.explain(
+        "SELECT loc, SUM(sal) AS total FROM emp, dept "
+        "WHERE dept = name AND sal > 15 GROUP BY loc ORDER BY total DESC",
+        scope,
+    )
+    expected = """\
+== logical plan ==
+Sort [total DESC]
+  Project [loc, total=__agg_0]
+    Aggregate keys=[dept.loc] aggs=[__agg_0=SUM(emp.sal)]
+      Filter (emp.sal > 15)
+        Join inner on [emp.dept = dept.name]
+          Scan emp [id, dept, sal, hired]
+          Scan dept [name, loc, budget]
+== optimized plan ==
+Sort [total DESC]
+  Project [loc, total=__agg_0]
+    Aggregate keys=[dept.loc] aggs=[__agg_0=SUM(emp.sal)]
+      Join inner on [emp.dept = dept.name]
+        Filter (emp.sal > 15)
+          Scan emp [dept, sal]
+        Scan dept [name, loc]"""
+    assert txt == expected
+
+
+# ----------------------------------------------------------------------
+# execution semantics on tiny frames
+# ----------------------------------------------------------------------
+def test_execute_order_limit_offsets(scope):
+    out = sql.execute(
+        "SELECT id, sal FROM emp WHERE sal >= 30 ORDER BY sal DESC LIMIT 2",
+        scope,
+    )
+    assert list(out.column("id")) == [5, 4]
+    assert list(out.column("sal")) == [60.0, 50.0]
+
+
+def test_execute_case_and_extract(scope):
+    out = sql.execute(
+        "SELECT id, CASE WHEN sal >= 40 THEN 1 ELSE 0 END AS senior, "
+        "EXTRACT(YEAR FROM hired) AS y FROM emp ORDER BY id",
+        scope,
+    )
+    assert list(out.column("senior")) == [0, 0, 0, 1, 1, 1]
+    assert list(out.column("y")) == [2020, 2021, 2020, 2022, 2021, 2020]
+
+
+def test_left_join_on_residual_prefilters_right(scope):
+    """Extra ON conditions on a LEFT JOIN restrict which right rows
+    match — they must NOT become a post-join filter (that would turn
+    the join inner and drop NULL-extended rows)."""
+    out = sql.execute(
+        "SELECT name, COUNT(id) AS n FROM dept "
+        "LEFT JOIN emp ON dept = name AND sal >= 30 "
+        "GROUP BY name ORDER BY name",
+        scope,
+    )
+    # every dept row survives; only sal>=30 emps count as matches
+    # (a: 30+60, b: 50, c: 40)
+    assert list(out.column("name")) == ["a", "b", "c"]
+    assert list(out.column("n")) == [2, 1, 1]
+
+
+def test_left_join_on_left_side_residual_rejected(scope):
+    with pytest.raises(SqlError) as ei:
+        sql.execute(
+            "SELECT name FROM dept LEFT JOIN emp ON dept = name AND budget > 100",
+            scope,
+        )
+    assert "LEFT JOIN" in str(ei.value) and "WHERE" in str(ei.value)
+
+
+def test_execute_left_join_counts(scope):
+    out = sql.execute(
+        "SELECT name, COUNT(id) AS n FROM dept LEFT JOIN emp ON dept = name "
+        "GROUP BY name ORDER BY name",
+        scope,
+    )
+    assert list(out.column("name")) == ["a", "b", "c"]
+    assert list(out.column("n")) == [3, 2, 1]
+
+
+def test_execute_select_star(scope):
+    out = sql.execute("SELECT * FROM dept ORDER BY name", scope)
+    assert out.column_names == ["name", "loc", "budget"]
+
+
+def test_execute_global_aggregate(scope):
+    out = sql.execute(
+        "SELECT COUNT(*) AS n, SUM(sal) AS s, MAX(sal) AS mx, "
+        "COUNT(DISTINCT dept) AS u FROM emp",
+        scope,
+    )
+    assert out.nrows == 1
+    assert out.column("n")[0] == 6
+    assert out.column("s")[0] == 210.0
+    assert out.column("mx")[0] == 60.0
+    assert out.column("u")[0] == 3
+
+
+def test_execute_unoptimized_matches_optimized(scope):
+    q = (
+        "SELECT loc, SUM(sal) AS total FROM emp, dept "
+        "WHERE dept = name AND sal > 15 GROUP BY loc ORDER BY total DESC"
+    )
+    a = sql.execute(q, scope)
+    b = sql.execute(q, scope, optimize=False)
+    assert list(a.column("loc")) == list(b.column("loc"))
+    assert list(a.column("total")) == list(b.column("total"))
+
+
+def test_scope_accepts_raw_numpy_dicts():
+    out = sql.execute(
+        "SELECT k, SUM(v) AS s FROM t GROUP BY k ORDER BY k",
+        {"t": {"k": np.array([1, 2, 1]), "v": np.array([1.0, 2.0, 3.0])}},
+    )
+    assert list(out.column("k")) == [1, 2]
+    assert list(out.column("s")) == [4.0, 2.0]
+
+
+def test_queries_scope_registry():
+    from repro import queries
+
+    with pytest.raises(KeyError):
+        queries.scope("nosuch")
+    frames = queries.scope("tpch", sf=0.0005, seed=3)
+    assert "lineitem" in frames and frames["lineitem"].nrows > 0
