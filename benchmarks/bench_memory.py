@@ -2,7 +2,6 @@
 raw on-disk CSV bytes, whole tables and per-column classes."""
 from __future__ import annotations
 
-import numpy as np
 
 from .common import report, tpch_frames, tpch_tables
 

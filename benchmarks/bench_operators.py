@@ -18,8 +18,7 @@ from .common import measure, report, tpch_frames, tpch_tables
 def _filter_udf(sf: float, quick: bool):
     import jax
 
-    from repro.core import CONFIG, col, strings
-    from repro.core import TensorFrame
+    from repro.core import col, strings
 
     tables = tpch_tables(sf)
     comments = tables["orders"]["o_comment"]

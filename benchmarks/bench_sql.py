@@ -16,13 +16,15 @@ from __future__ import annotations
 from .common import measure, report, tpch_frames
 
 
-QUICK_QUERIES = ("q1", "q3", "q6", "q14")
+# q4 and q22 exercise the decorrelation path (semi/anti joins, attached
+# scalars) so the quick lane also times the subquery machinery
+QUICK_QUERIES = ("q1", "q3", "q4", "q6", "q14", "q22")
 
 
 def run(sf: float = 0.01, quick: bool = False):
     from repro import sql
     from repro.queries import tpch_frames as QF
-    from repro.queries.tpch_sql import TPCH_SQL
+    from repro.queries.tpch_sql import TPCH_SQL, sql_text
 
     frames = tpch_frames(sf)
     qnames = sorted(TPCH_SQL, key=lambda s: int(s[1:]))
@@ -30,7 +32,7 @@ def run(sf: float = 0.01, quick: bool = False):
         qnames = [q for q in qnames if q in QUICK_QUERIES]
     repeats = 1 if quick else 3
     for qname in qnames:
-        text = TPCH_SQL[qname]
+        text = sql_text(qname, sf)
         t_hand = measure(
             lambda: QF.ALL[qname](frames, sf=sf, apply_limit=False),
             repeats=repeats,

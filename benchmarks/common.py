@@ -1,13 +1,17 @@
 """Shared benchmark infrastructure: timing, data caching, reporting.
 
-Output contract (benchmarks/run.py): CSV lines ``name,us_per_call,derived``.
+Output contract (benchmarks/run.py): CSV lines ``name,us_per_call,derived``
+on stdout; ``write_json(path)`` additionally dumps the collected rows as
+a JSON document (used by the CI bench-smoke job's artifact).
 """
 from __future__ import annotations
 
 import functools
 import gc
+import json
+import platform
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable
 
 ROWS = []
 
@@ -29,6 +33,26 @@ def measure(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
 def report(name: str, seconds: float, derived: str = "") -> None:
     ROWS.append((name, seconds * 1e6, derived))
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def write_json(path: str) -> None:
+    """Dump every reported row (plus host metadata) as JSON."""
+    doc = {
+        "schema": "repro-bench/v1",
+        "host": {
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+        },
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "rows": [
+            {"name": name, "us_per_call": us, "derived": derived}
+            for name, us, derived in ROWS
+        ],
+    }
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"# wrote {len(ROWS)} rows to {path}", flush=True)
 
 
 @functools.lru_cache(maxsize=4)

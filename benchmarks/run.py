@@ -1,8 +1,11 @@
 """Benchmark harness entry point: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only name,...]
+                                            [--json out.json]
 
-Prints ``name,us_per_call,derived`` CSV rows (see common.report).
+Prints ``name,us_per_call,derived`` CSV rows (see common.report);
+``--json PATH`` additionally writes the rows as a JSON document (the CI
+bench-smoke job uploads it as the ``BENCH_PR.json`` artifact).
 Default is quick mode (small scale factors) so the whole suite runs in
 minutes on CPU; --full uses larger data.
 """
@@ -17,6 +20,12 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
     ap.add_argument("--sf", type=float, default=None)
+    ap.add_argument(
+        "--json",
+        default="",
+        metavar="PATH",
+        help="also write the result rows as a JSON document",
+    )
     args = ap.parse_args()
     quick = not args.full
     sf = args.sf or (0.01 if quick else 0.05)
@@ -58,6 +67,10 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             print(f"{name}/SUITE_ERROR,0,{type(e).__name__}: {e}", flush=True)
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if args.json:
+        from .common import write_json
+
+        write_json(args.json)
 
 
 if __name__ == "__main__":

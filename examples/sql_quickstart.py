@@ -56,7 +56,26 @@ print()
 print(sql.explain(query, frames))
 
 # ----------------------------------------------------------------------
-# 3. registered scopes: benchmark tables by name
+# 3. subqueries: the optimizer decorrelates them into joins
+# ----------------------------------------------------------------------
+big_spenders = """
+    SELECT customer, COUNT(*) AS n
+    FROM orders o
+    WHERE amount > (SELECT AVG(o2.amount) FROM orders o2)
+      AND EXISTS (SELECT * FROM customers c
+                  WHERE c.name = o.customer AND c.region = 'north')
+    GROUP BY customer
+    ORDER BY customer
+"""
+print()
+print(sql.execute(big_spenders, frames).show())
+# the naive plan keeps interpreted subquery markers; the optimized one
+# shows the AttachScalar constant and the EXISTS rewritten to a semi join
+print()
+print(sql.explain(big_spenders, frames))
+
+# ----------------------------------------------------------------------
+# 4. registered scopes: benchmark tables by name
 # ----------------------------------------------------------------------
 tpch = scope("tpch", sf=0.001, seed=0)
 top = sql.execute(

@@ -5,7 +5,7 @@ for Mojo's dictionary accumulation (DESIGN.md §2).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple, Union
+from typing import Dict, List, Tuple, Union
 
 import numpy as np
 import jax

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from . import hashing
 from .agg import normalize_specs, segment_agg
-from .frame import INT, ColumnMeta, TensorFrame
+from .frame import INT, TensorFrame
 
 
 class GroupBy:

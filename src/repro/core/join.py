@@ -38,7 +38,6 @@ from .frame import (
     ColumnMeta,
     OffloadedColumn,
     TensorFrame,
-    _empty_tensor,
     _is_hidden,
     _valid_name,
 )

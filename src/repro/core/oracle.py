@@ -7,7 +7,7 @@ unlikely.  Columns are plain Python lists; None is the null.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
 import numpy as np
 

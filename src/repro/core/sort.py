@@ -6,9 +6,8 @@ integer sort on its codes: cardinality-awareness pays again.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Union
+from typing import Sequence, Union
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 

@@ -12,9 +12,8 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
-from . import ref
+from . import ref  # noqa: F401  (re-exported reference path)
 from .flash_attention import flash_attention_pallas
 from .hash32x2 import hash32x2_pallas
 from .segment_reduce import segment_sum_sorted_pallas

@@ -6,7 +6,6 @@ assert against.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import numpy as np

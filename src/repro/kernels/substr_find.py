@@ -9,7 +9,6 @@ vector compares/ands.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import numpy as np

@@ -25,14 +25,12 @@ import traceback
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, get
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch.shapes import SHAPES, cell_applicable, input_specs
 from repro.models import lm, partition
-from repro.models.config import ModelConfig
 from repro.train.train_step import make_train_step
 
 # TPU v5e roofline constants

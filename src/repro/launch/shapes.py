@@ -7,7 +7,7 @@ architectures (rwkv6, zamba2); the skip is recorded per cell.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ plain pytrees of jax.Arrays.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Optional, Tuple
 
 import numpy as np

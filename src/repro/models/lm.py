@@ -4,8 +4,7 @@ architecture family, built on lax.scan over stacked layer parameters
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 import jax

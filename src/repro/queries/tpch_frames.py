@@ -11,7 +11,7 @@ per-operation chained calls.
 """
 from __future__ import annotations
 
-from repro.core import TensorFrame, col, d, if_else, lit
+from repro.core import col, d, if_else, lit
 
 
 def _rev():

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import math
 from collections import defaultdict
-from typing import Any, Callable, Dict, List
+from typing import Dict, List
 
 import numpy as np
 

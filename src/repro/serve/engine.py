@@ -8,7 +8,7 @@ continuous batching — the decode step itself never recompiles).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 import jax

@@ -18,10 +18,11 @@ Public API::
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 from .parser import SqlError, parse
 from .plan import build_plan, format_plan
+from .optimize import decorrelate as _decorrelate
 from .optimize import optimize as _optimize
 from .lower import lower_plan, scope_frames
 
@@ -50,9 +51,14 @@ def execute(query: str, scope: Dict, *, optimize: bool = True):
     """Run a SQL ``SELECT`` over a scope of TensorFrames.
 
     Returns a TensorFrame (aggregate-only queries yield one row).
+    ``optimize=False`` skips constant folding, filter pushdown and
+    projection pruning, but still decorrelates subqueries — the
+    TensorFrame backend has no interpreted-subquery path (only the
+    oracle backend interprets markers, row at a time).
     """
     frames = scope_frames(scope)
-    plan = plan_query(query, frames, optimized=optimize)
+    plan = plan_query(query, frames, optimized=False)
+    plan = _optimize(plan) if optimize else _decorrelate(plan)
     return lower_plan(plan, frames)
 
 

@@ -38,7 +38,19 @@ from .parser import (
     SAnd,
     format_expr,
 )
-from .plan import Aggregate, Filter, Join, Limit, Project, Scan, Sort
+from .plan import (
+    Aggregate,
+    AttachScalar,
+    Distinct,
+    Filter,
+    Join,
+    Limit,
+    Project,
+    SOuter,
+    SUBQUERY_MARKERS,
+    Scan,
+    Sort,
+)
 
 
 def scope_frames(scope: Dict) -> Dict[str, TensorFrame]:
@@ -136,10 +148,33 @@ def to_expr(e) -> Expr:
             raise SqlError(
                 f"aggregate {e.name.upper()} outside GROUP BY context"
             )
+        if e.name == "substring":
+            return _lower_substring(e)
         if e.name in _SCALAR_FNS and len(e.args) == 1:
             return getattr(to_expr(e.args[0]), e.name)()
         raise SqlError(f"unsupported function {e.name.upper()}")
+    if isinstance(e, SUBQUERY_MARKERS):
+        raise SqlError(
+            f"subquery {e.name} was not decorrelated; the TensorFrame "
+            f"backend cannot interpret subqueries — run with the "
+            f"optimizer's decorrelation pass enabled"
+        )
+    if isinstance(e, SOuter):
+        raise SqlError(
+            f"unresolved correlated reference {e.internal}; the plan "
+            f"was not decorrelated"
+        )
     raise SqlError(f"cannot lower expression {format_expr(e)}")
+
+
+def _lower_substring(e: SFunc) -> Expr:
+    if len(e.args) != 3:
+        raise SqlError("SUBSTRING takes (string, start, length)")
+    _, start, length = e.args
+    if not (isinstance(start, SLit) and isinstance(length, SLit)):
+        raise SqlError("SUBSTRING start/length must be integer literals")
+    lo = int(start.value) - 1  # SQL is 1-based
+    return to_expr(e.args[0]).str.slice(lo, lo + int(length.value))
 
 
 # ----------------------------------------------------------------------
@@ -176,6 +211,39 @@ def lower_plan(node, frames: Dict[str, TensorFrame]) -> TensorFrame:
         return f.sort_values([n for n, _ in node.keys], [a for _, a in node.keys])
     if isinstance(node, Limit):
         return lower_plan(node.child, frames).head(node.n)
+    if isinstance(node, Distinct):
+        f = lower_plan(node.child, frames)
+        cols = list(f.column_names)
+        deduped = f.groupby(cols).agg([("__distinct_n", "size", "")])
+        return deduped.select(cols)
+    if isinstance(node, AttachScalar):
+        f = lower_plan(node.child, frames)
+        sub = lower_plan(node.sub.v, frames)
+        if sub.nrows > 1:
+            raise SqlError(
+                f"scalar subquery {node.name} returned {sub.nrows} rows"
+            )
+        arr = np.asarray(sub.column(node.output))
+        if sub.nrows == 0:
+            if arr.dtype.kind in "OUS":
+                # no NULL string literal exists in the engine
+                raise SqlError(
+                    f"string scalar subquery {node.name} returned no rows "
+                    f"(NULL string constants are not supported)"
+                )
+            # zero rows -> NULL; NaN makes every comparison false,
+            # matching the oracle's None semantics
+            return f.with_column(node.name, lit(float("nan")))
+        v = arr[0]
+        if arr.dtype.kind == "f":
+            v = float(v)
+        elif arr.dtype.kind in "iu":
+            v = int(v)
+        elif arr.dtype.kind == "b":
+            v = bool(v)
+        else:  # string/object dictionary column
+            v = str(v)
+        return f.with_column(node.name, lit(v))
     raise TypeError(f"unknown plan node {type(node).__name__}")
 
 

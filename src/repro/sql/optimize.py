@@ -1,28 +1,41 @@
 """Rule-based plan optimizer.
 
-Three rewrites, applied in order:
+Four rewrites, applied in order:
 
-1. **Constant folding** — literal arithmetic/comparisons and
+1. **Decorrelation** — planned subquery markers (the naive plan keeps
+   them for the row-at-a-time oracle) are rewritten to relational
+   operators: uncorrelated scalar subqueries become an attached
+   constant (cross join with a one-row result), ``IN``/``NOT IN``
+   become semi/anti joins on the subquery output, correlated
+   ``EXISTS``/``NOT EXISTS`` become semi/anti joins on their equality
+   correlation keys, and correlated scalar aggregates are re-keyed by
+   the correlation columns into a group-by joined back to the outer
+   query (HiFrames-style nested-query lowering).  A single ``<>``
+   correlation residual under EXISTS is handled through a
+   nunique/min aggregate (TPC-H Q21's shape).
+2. **Constant folding** — literal arithmetic/comparisons and
    DATE +/- INTERVAL collapse at plan time, so e.g. TPC-H Q1's
    ``DATE '1998-12-01' - INTERVAL '90' DAY`` becomes one date literal
    and Q6's ``0.06 - 0.01`` bounds become plain numbers.
-2. **Filter pushdown** — the planner leaves one big Filter above the
+3. **Filter pushdown** — the planner leaves one big Filter above the
    join tree; this rule splits it into conjuncts and pushes each as far
    down as its columns allow: through inner joins to either side,
    through left joins to the left (probe) side only, and through
    aggregates when a conjunct touches only plain group-key columns.
    Single-table predicates end up directly above their Scan, shrinking
    every join build/probe input (Flare's plan-level pushdown).
-3. **Projection pruning** — a top-down required-column pass narrows
+4. **Projection pruning** — a top-down required-column pass narrows
    every Scan to the columns the query actually touches, so joins
    materialize fewer columns and offloaded strings stay offloaded.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Set
+from typing import List, Optional, Set
 
 from .parser import (
+    Boxed,
+    SqlError,
     SAnd,
     SBin,
     SCase,
@@ -30,6 +43,7 @@ from .parser import (
     SCol,
     SDate,
     SInterval,
+    SIsNull,
     SLit,
     SNot,
     SOr,
@@ -37,25 +51,443 @@ from .parser import (
     expr_columns,
     split_conjuncts,
     transform,
+    walk,
 )
 from .plan import (
     Aggregate,
+    AttachScalar,
+    Distinct,
+    ExistsExpr,
     Filter,
+    InSubExpr,
     Join,
     Limit,
     Project,
     Scan,
     Sort,
+    SOuter,
+    SubqueryExpr,
+    _replace_subexpr,
     node_columns,
+    subquery_markers,
 )
 
 
 def optimize(plan):
-    """fold constants -> push filters -> prune projections."""
+    """decorrelate -> fold constants -> push filters -> prune."""
+    plan = decorrelate(plan)
     plan = fold_constants(plan)
     plan = push_filters(plan)
     plan = prune_projections(plan)
     return plan
+
+
+# ----------------------------------------------------------------------
+# rule 0: decorrelation (subquery markers -> joins / attached scalars)
+# ----------------------------------------------------------------------
+def decorrelate(plan):
+    """Rewrite every planned subquery marker into join form.
+
+    The result contains no markers and no ``SOuter`` references, so it
+    can be lowered onto TensorFrame; shapes outside the supported
+    rewrites raise ``SqlError`` instead of silently interpreting."""
+    node = plan
+    if isinstance(node, Filter):
+        child = decorrelate(node.child)
+        remaining: List[object] = []
+        for c in split_conjuncts(node.pred):
+            child, res = _rewrite_conjunct(child, c)
+            if res is not None:
+                remaining.append(res)
+        return Filter(child, conjoin(remaining)) if remaining else child
+    if isinstance(node, Join):
+        return dataclasses.replace(
+            node, left=decorrelate(node.left), right=decorrelate(node.right)
+        )
+    if isinstance(node, Project):
+        child = decorrelate(node.child)
+        outputs = []
+        for n, e in node.outputs:
+            for m in subquery_markers(e):
+                if not isinstance(m, SubqueryExpr):
+                    raise SqlError(
+                        "EXISTS/IN subqueries are not supported in the "
+                        "SELECT list"
+                    )
+                child, repl = _rewrite_select_scalar(child, m)
+                e = _replace_subexpr(e, m, repl)
+            outputs.append((n, e))
+        return Project(child, tuple(outputs))
+    if isinstance(node, Aggregate):
+        for e in [e for _, e in node.keys] + [
+            e for _, _, e in node.aggs if e is not None
+        ]:
+            if subquery_markers(e):
+                raise SqlError(
+                    "subqueries inside GROUP BY keys or aggregate "
+                    "arguments are not supported"
+                )
+        return dataclasses.replace(node, child=decorrelate(node.child))
+    if isinstance(node, (Sort, Limit, Distinct)):
+        return dataclasses.replace(node, child=decorrelate(node.child))
+    if isinstance(node, AttachScalar):
+        return dataclasses.replace(
+            node,
+            child=decorrelate(node.child),
+            sub=Boxed(decorrelate(node.sub.v)),
+        )
+    return node
+
+
+def _rewrite_select_scalar(child, m: SubqueryExpr):
+    """Scalar subquery used as a SELECT-list value.
+
+    Only the uncorrelated form is supported: it attaches the constant.
+    A correlated one would need outer-join (keep-row-with-NULL)
+    semantics that the inner-join rewrite cannot provide."""
+    from .plan import plan_outer_refs
+
+    if plan_outer_refs(m.plan.v):
+        raise SqlError(
+            "correlated scalar subqueries are only supported in "
+            "WHERE/HAVING, not in the SELECT list"
+        )
+    return _rewrite_scalar(child, m)
+
+
+def _rewrite_conjunct(child, c):
+    """Rewrite one Filter conjunct; returns (new child, residual
+    predicate or None)."""
+    if isinstance(c, ExistsExpr):
+        return _rewrite_exists(child, c)
+    if isinstance(c, InSubExpr):
+        return _rewrite_in(child, c)
+    markers = subquery_markers(c)
+    if not markers:
+        return child, c
+    for m in markers:
+        if not isinstance(m, SubqueryExpr):
+            raise SqlError(
+                f"{type(m).__name__.replace('Expr', '').upper()} subqueries "
+                f"are only supported as top-level AND conjuncts of "
+                f"WHERE/HAVING, not nested inside other expressions"
+            )
+        child, repl = _rewrite_scalar(child, m)
+        c = _replace_subexpr(c, m, repl)
+    return child, c
+
+
+def _strip_wrappers(p, what, drop_project=False, drop_distinct=False):
+    """Peel semantics-free wrappers off a subquery plan.
+
+    Sort never affects a subquery's value; Distinct is dropped only
+    where duplicates cannot matter (EXISTS / IN membership).  LIMIT
+    would change the result and has no join rewrite, so it is rejected
+    rather than silently discarded."""
+    while True:
+        if isinstance(p, Sort):
+            p = p.child
+        elif isinstance(p, Distinct) and drop_distinct:
+            p = p.child
+        elif isinstance(p, Limit):
+            raise SqlError(f"LIMIT inside {what} subqueries is not supported")
+        elif isinstance(p, Distinct):
+            raise SqlError(
+                f"SELECT DISTINCT inside {what} subqueries is not supported"
+            )
+        else:
+            break
+    if drop_project and isinstance(p, Project):
+        p = p.child
+    return p
+
+
+def _strip_correlation(node, under_agg=False):
+    """Remove correlation conjuncts from a subquery plan.
+
+    Returns ``(plan, eqs, neqs)`` with eqs/neqs lists of
+    ``(outer_internal, inner_internal, under_aggregate)`` taken from
+    ``inner = outer`` / ``inner <> outer`` Filter conjuncts.  Any other
+    predicate that still references an enclosing scope is unsupported.
+    """
+    if isinstance(node, Filter):
+        child, eqs, neqs = _strip_correlation(node.child, under_agg)
+        keep = []
+        for c in split_conjuncts(node.pred):
+            kind, pair = _classify_correlation(c, under_agg)
+            if kind == "eq":
+                eqs.append(pair)
+            elif kind == "neq":
+                neqs.append(pair)
+            else:
+                keep.append(c)
+        out = Filter(child, conjoin(keep)) if keep else child
+        return out, eqs, neqs
+    if isinstance(node, Join):
+        left, e1, n1 = _strip_correlation(node.left, under_agg)
+        right, e2, n2 = _strip_correlation(node.right, under_agg)
+        return (
+            dataclasses.replace(node, left=left, right=right),
+            e1 + e2,
+            n1 + n2,
+        )
+    if isinstance(node, Aggregate):
+        child, eqs, neqs = _strip_correlation(node.child, True)
+        return dataclasses.replace(node, child=child), eqs, neqs
+    if isinstance(node, (Project, Sort, Limit, Distinct)):
+        child, eqs, neqs = _strip_correlation(node.child, under_agg)
+        return dataclasses.replace(node, child=child), eqs, neqs
+    if isinstance(node, AttachScalar):
+        child, eqs, neqs = _strip_correlation(node.child, under_agg)
+        return dataclasses.replace(node, child=child), eqs, neqs
+    return node, [], []
+
+
+def _classify_correlation(c, under_agg):
+    """One conjunct -> ('eq'|'neq', (outer, inner, under_agg)) or
+    (None, None) for a plain local predicate."""
+    if isinstance(c, SCmp) and c.op in ("=", "<>"):
+        a, b = c.a, c.b
+        if isinstance(a, SOuter) and not _has_outer(b):
+            outer, inner = a, b
+        elif isinstance(b, SOuter) and not _has_outer(a):
+            outer, inner = b, a
+        else:
+            outer = None
+        if outer is not None:
+            if not isinstance(inner, SCol):
+                raise SqlError(
+                    f"correlated predicate must compare an outer column "
+                    f"to a plain subquery column, got a computed "
+                    f"expression on the inner side"
+                )
+            kind = "eq" if c.op == "=" else "neq"
+            return kind, (outer.internal, inner.internal, under_agg)
+    if _has_outer(c):
+        raise SqlError(
+            "unsupported correlated predicate shape (only "
+            "inner = outer and inner <> outer conjuncts decorrelate)"
+        )
+    return None, None
+
+
+def _has_outer(e) -> bool:
+    return any(isinstance(n, SOuter) for n in walk(e))
+
+
+def _check_outer_available(child, refs, what):
+    cols = node_columns(child)
+    for o in refs:
+        if o not in cols:
+            raise SqlError(
+                f"correlated reference {o!r} in {what} is not available "
+                f"in the immediately enclosing query (multi-level "
+                f"correlation is not supported)"
+            )
+
+
+def _dedupe_pairs(pairs):
+    seen, out = set(), []
+    for o, i, _ in pairs:
+        if (o, i) not in seen:
+            seen.add((o, i))
+            out.append((o, i))
+    return out
+
+
+def _rewrite_exists(child, m: ExistsExpr):
+    sub = decorrelate(m.plan.v)
+    # outputs (and dedup) are irrelevant to row existence
+    sub = _strip_wrappers(sub, "EXISTS", drop_project=True, drop_distinct=True)
+    sub, eqs, neqs = _strip_correlation(sub)
+    if any(u for _, _, u in eqs + neqs):
+        raise SqlError(
+            "correlation below an aggregate inside EXISTS is not supported"
+        )
+    if not eqs and not neqs:
+        # uncorrelated EXISTS: attach COUNT(*) of the subquery once
+        n = f"{m.name}_n"
+        agg = Project(
+            Aggregate(sub, (), ((n, "size", None),)), ((n, SCol("", n)),)
+        )
+        out = AttachScalar(child, m.name, Boxed(agg), n)
+        op = "=" if m.negated else ">"
+        return out, SCmp(op, SCol("", m.name), SLit(0))
+    if not eqs:
+        raise SqlError(
+            "EXISTS correlated only by <> is not supported; add an "
+            "equality correlation"
+        )
+    eq = _dedupe_pairs(eqs)
+    _check_outer_available(child, [o for o, _ in eq], "EXISTS subquery")
+    if not neqs:
+        how = "anti" if m.negated else "semi"
+        return (
+            Join(
+                child,
+                sub,
+                tuple(o for o, _ in eq),
+                tuple(i for _, i in eq),
+                how,
+            ),
+            None,
+        )
+    # one <> residual: EXISTS(inner: key = outer_key AND c <> outer_c).
+    # Group the inner rows by the equality keys with
+    # n = NUNIQUE(c), m = MIN(c); then
+    #   EXISTS      <=>  key has rows  AND NOT (n == 1 AND m == outer_c)
+    #   NOT EXISTS  <=>  key has no rows OR (n == 1 AND m == outer_c)
+    nq = _dedupe_pairs(neqs)
+    if len(nq) != 1:
+        raise SqlError(
+            "at most one <> correlation is supported inside EXISTS"
+        )
+    (no, ni) = nq[0]
+    _check_outer_available(child, [no], "EXISTS subquery")
+    ncol, mcol = f"{m.name}_n", f"{m.name}_m"
+    group = Aggregate(
+        sub,
+        tuple((i, SCol("", i)) for _, i in eq),
+        ((ncol, "nunique", SCol("", ni)), (mcol, "min", SCol("", ni))),
+    )
+    if not m.negated:
+        # semi join on the equality keys, then anti join against the
+        # single-value groups whose only value equals the outer column
+        semi = Join(
+            child,
+            sub,
+            tuple(o for o, _ in eq),
+            tuple(i for _, i in eq),
+            "semi",
+        )
+        only_one = Filter(group, SCmp("=", SCol("", ncol), SLit(1)))
+        anti = Join(
+            semi,
+            only_one,
+            tuple(o for o, _ in eq) + (no,),
+            tuple(i for _, i in eq) + (mcol,),
+            "anti",
+        )
+        return anti, None
+    # NOT EXISTS: left join the grouped inner, keep rows with no group
+    # or whose single inner value is exactly the outer column's value
+    left = Join(
+        child,
+        group,
+        tuple(o for o, _ in eq),
+        tuple(i for _, i in eq),
+        "left",
+    )
+    residual = SOr(
+        SIsNull(SCol("", ncol)),
+        SAnd(
+            SCmp("=", SCol("", ncol), SLit(1)),
+            SCmp("=", SCol("", mcol), SCol("", no)),
+        ),
+    )
+    return left, residual
+
+
+def _rewrite_in(child, m: InSubExpr):
+    if not isinstance(m.e, SCol):
+        raise SqlError(
+            "the left side of IN (SELECT ...) must be a plain column"
+        )
+    sub = decorrelate(m.plan.v)
+    # keep the Project (its output is the key); IN is a membership
+    # test, so dedup is also droppable
+    sub = _strip_wrappers(sub, "IN", drop_distinct=True)
+    sub, eqs, neqs = _strip_correlation(sub)
+    if neqs:
+        raise SqlError("<> correlation inside IN subqueries is not supported")
+    if any(u for _, _, u in eqs):
+        raise SqlError(
+            "correlation below an aggregate inside IN is not supported"
+        )
+    eq = _dedupe_pairs(eqs)
+    if eq:
+        sub = _extend_project(sub, [i for _, i in eq])
+    _check_outer_available(child, [o for o, _ in eq], "IN subquery")
+    how = "anti" if m.negated else "semi"
+    return (
+        Join(
+            child,
+            sub,
+            (m.e.internal,) + tuple(o for o, _ in eq),
+            (m.output,) + tuple(i for _, i in eq),
+            how,
+        ),
+        None,
+    )
+
+
+def _extend_project(plan, extra_cols):
+    """Pass correlation key columns through a subquery's root Project."""
+    if not isinstance(plan, Project):
+        raise SqlError("correlated IN subquery has an unsupported shape")
+    outs = plan.outputs + tuple(
+        (c, SCol("", c)) for c in extra_cols if c not in {n for n, _ in plan.outputs}
+    )
+    return Project(plan.child, outs)
+
+
+def _rewrite_scalar(child, m: SubqueryExpr):
+    sub = decorrelate(m.plan.v)
+    sub = _strip_wrappers(sub, "scalar")  # DISTINCT changes row counts: reject
+    sub, eqs, neqs = _strip_correlation(sub)
+    if neqs:
+        raise SqlError(
+            "<> correlation inside scalar subqueries is not supported"
+        )
+    if not eqs:
+        return (
+            AttachScalar(child, m.name, Boxed(sub), m.output),
+            SCol("", m.name),
+        )
+    # correlated scalar aggregate: re-key the aggregate by the inner
+    # correlation columns and join the grouped result back in.  Empty
+    # groups vanish (inner join), which matches NULL-comparison
+    # semantics for MIN/MAX/AVG/SUM predicates; COUNT (which would
+    # need 0, not NULL) is rejected.
+    if not all(u for _, _, u in eqs):
+        raise SqlError(
+            "correlated scalar subqueries must correlate inside an "
+            "aggregate (SELECT AGG(...) ... WHERE inner = outer)"
+        )
+    if not (
+        isinstance(sub, Project)
+        and len(sub.outputs) == 1
+        and isinstance(sub.child, Aggregate)
+        and not sub.child.keys
+    ):
+        raise SqlError(
+            "correlated scalar subquery must be a single ungrouped "
+            "aggregate over the correlated table"
+        )
+    agg = sub.child
+    if any(fn in ("size", "count") for _, fn, _ in agg.aggs):
+        raise SqlError(
+            "correlated COUNT subqueries are not supported (empty "
+            "groups would need COUNT = 0, which the join rewrite drops)"
+        )
+    eq = _dedupe_pairs(eqs)
+    _check_outer_available(child, [o for o, _ in eq], "scalar subquery")
+    keyed = Aggregate(
+        agg.child, tuple((i, SCol("", i)) for _, i in eq), agg.aggs
+    )
+    (_, vexpr), = sub.outputs
+    proj = Project(
+        keyed,
+        tuple((i, SCol("", i)) for _, i in eq) + ((m.name, vexpr),),
+    )
+    joined = Join(
+        child,
+        proj,
+        tuple(o for o, _ in eq),
+        tuple(i for _, i in eq),
+        "inner",
+    )
+    return joined, SCol("", m.name)
 
 
 # ----------------------------------------------------------------------
@@ -173,8 +605,14 @@ def fold_constants(node):
         return dataclasses.replace(
             node, left=fold_constants(node.left), right=fold_constants(node.right)
         )
-    if isinstance(node, (Sort, Limit)):
+    if isinstance(node, (Sort, Limit, Distinct)):
         return dataclasses.replace(node, child=fold_constants(node.child))
+    if isinstance(node, AttachScalar):
+        return dataclasses.replace(
+            node,
+            child=fold_constants(node.child),
+            sub=Boxed(fold_constants(node.sub.v)),
+        )
     return node
 
 
@@ -197,8 +635,14 @@ def push_filters(node):
         return dataclasses.replace(
             node, left=push_filters(node.left), right=push_filters(node.right)
         )
-    if isinstance(node, (Project, Aggregate, Sort, Limit)):
+    if isinstance(node, (Project, Aggregate, Sort, Limit, Distinct)):
         return dataclasses.replace(node, child=push_filters(node.child))
+    if isinstance(node, AttachScalar):
+        return dataclasses.replace(
+            node,
+            child=push_filters(node.child),
+            sub=Boxed(push_filters(node.sub.v)),
+        )
     return node
 
 
@@ -241,6 +685,22 @@ def _push_into(child, conjuncts):
             )
         out = dataclasses.replace(out, child=push_filters(out.child))
         return Filter(out, conjoin(stay)) if stay else out
+    if isinstance(child, Distinct):
+        # a filter over the deduped columns commutes with dedup
+        return Distinct(_push_into(child.child, conjuncts))
+    if isinstance(child, AttachScalar):
+        below, stay = [], []
+        for c in conjuncts:
+            (stay if child.name in expr_columns(c) else below).append(c)
+        inner = (
+            _push_into(child.child, below)
+            if below
+            else push_filters(child.child)
+        )
+        out = dataclasses.replace(
+            child, child=inner, sub=Boxed(push_filters(child.sub.v))
+        )
+        return Filter(out, conjoin(stay)) if stay else out
     child = push_filters(child)
     return Filter(child, conjoin(conjuncts))
 
@@ -261,6 +721,16 @@ def prune_projections(node, required: Optional[Set[str]] = None):
     if isinstance(node, (Sort, Limit)):
         return dataclasses.replace(
             node, child=prune_projections(node.child, required)
+        )
+    if isinstance(node, Distinct):
+        # dedup semantics depend on every child column: keep them all
+        return Distinct(prune_projections(node.child, None))
+    if isinstance(node, AttachScalar):
+        need = None if required is None else required - {node.name}
+        return dataclasses.replace(
+            node,
+            child=prune_projections(node.child, need),
+            sub=Boxed(prune_projections(node.sub.v, None)),
         )
     if isinstance(node, Filter):
         need = None if required is None else required | expr_columns(node.pred)

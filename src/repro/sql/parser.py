@@ -3,13 +3,19 @@
 Covers the TPC-H SELECT dialect: projections with aliases, arithmetic,
 comparisons, AND/OR/NOT, IN, BETWEEN, LIKE, IS [NOT] NULL, CASE WHEN,
 EXTRACT(YEAR|MONTH|DAY FROM e), DATE/INTERVAL literals, aggregate calls
-(COUNT/SUM/AVG/MIN/MAX, COUNT(*), COUNT(DISTINCT c)), comma-separated
-FROM lists with aliases, [INNER|LEFT] JOIN ... ON, WHERE, GROUP BY,
-HAVING, ORDER BY [ASC|DESC], LIMIT.
+(COUNT/SUM/AVG/MIN/MAX, COUNT(*), COUNT(DISTINCT c)), SELECT DISTINCT,
+comma-separated FROM lists with aliases, derived tables
+(``FROM (SELECT ...) alias``), [INNER|LEFT] JOIN ... ON, WHERE,
+GROUP BY, HAVING, ORDER BY [ASC|DESC], LIMIT, and subqueries: scalar
+``(SELECT ...)`` in expressions, ``[NOT] IN (SELECT ...)`` and
+``[NOT] EXISTS (SELECT ...)`` predicates (correlation is resolved by
+the planner, decorrelation by the optimizer).
 
 All AST nodes are frozen dataclasses: structural equality/hash are used
 by the planner to deduplicate aggregate expressions and by tests for
-plan comparison.
+plan comparison.  Nested SELECTs are wrapped in ``Boxed`` — a plain
+(non-dataclass) holder with value equality — so the generic
+``walk``/``transform`` helpers do not descend across scope boundaries.
 """
 from __future__ import annotations
 
@@ -22,6 +28,32 @@ import numpy as np
 
 class SqlError(ValueError):
     """Parse/plan/lowering error with a human-readable message."""
+
+
+class Boxed:
+    """Opaque holder for a nested SELECT (or a planned subquery tree).
+
+    Not a dataclass on purpose: ``walk``/``transform``/``expr_columns``
+    skip non-dataclass field values, so an outer-scope rewrite never
+    descends into a subquery's own expressions.  Equality and hash
+    delegate to the wrapped value so AST equality still works."""
+
+    __slots__ = ("v",)
+
+    def __init__(self, v):
+        self.v = v
+
+    def __eq__(self, other):
+        return isinstance(other, Boxed) and self.v == other.v
+
+    def __ne__(self, other):
+        return not self.__eq__(other)
+
+    def __hash__(self):
+        return hash(self.v)
+
+    def __repr__(self):
+        return f"Boxed({self.v!r})"
 
 
 # ----------------------------------------------------------------------
@@ -131,6 +163,9 @@ class SExtract:
 
 AGG_FUNCS = ("count", "sum", "avg", "min", "max")
 
+# non-aggregate functions the engine and the oracle both implement
+SCALAR_FUNCS = ("abs", "sqrt", "floor", "exp", "log", "sin", "cos", "substring")
+
 
 @dataclasses.dataclass(frozen=True)
 class SFunc:
@@ -148,13 +183,38 @@ class SStar:
     pass
 
 
+@dataclasses.dataclass(frozen=True)
+class SSub:
+    """Scalar subquery ``(SELECT ...)`` used as an expression."""
+
+    select: Boxed  # Boxed[Select]
+
+
+@dataclasses.dataclass(frozen=True)
+class SInSub:
+    """``e [NOT] IN (SELECT ...)``."""
+
+    e: object
+    select: Boxed  # Boxed[Select]
+    negated: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SExists:
+    """``[NOT] EXISTS (SELECT ...)``."""
+
+    select: Boxed  # Boxed[Select]
+    negated: bool = False
+
+
 # ----------------------------------------------------------------------
 # statement AST
 # ----------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class FromItem:
-    table: str
+    table: str  # "" for a derived table
     alias: str
+    sub: Optional[Boxed] = None  # Boxed[Select] for derived tables
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,6 +234,7 @@ class Select:
     having: Optional[object]
     order_by: Tuple[Tuple[object, bool], ...]  # (expr, ascending)
     limit: Optional[int]
+    distinct: bool = False
 
 
 # ----------------------------------------------------------------------
@@ -196,7 +257,7 @@ KEYWORDS = {
     "select", "from", "where", "group", "by", "having", "order", "limit",
     "as", "and", "or", "not", "in", "between", "like", "is", "null",
     "case", "when", "then", "else", "end", "extract", "date", "interval",
-    "join", "inner", "left", "outer", "on",
+    "join", "inner", "left", "outer", "on", "exists",
     "asc", "desc", "distinct", "true", "false",
 }
 
@@ -286,6 +347,7 @@ class _Parser:
         return sel
 
     def select_body(self) -> Select:
+        distinct = self.accept_kw("distinct")
         columns = [self.select_item()]
         while self.accept_op(","):
             columns.append(self.select_item())
@@ -322,8 +384,14 @@ class _Parser:
             limit = int(t.text)
         return Select(
             tuple(columns), tuple(from_items), tuple(joins), where,
-            group_by, having, tuple(order_by), limit,
+            group_by, having, tuple(order_by), limit, distinct,
         )
+
+    def subselect(self) -> Boxed:
+        """Parse ``SELECT ...`` (the opening keyword already expected by
+        the caller) and box it against outer-scope tree rewrites."""
+        self.expect_kw("select")
+        return Boxed(self.select_body())
 
     def select_item(self):
         if self.accept_op("*"):
@@ -347,6 +415,12 @@ class _Parser:
         self.fail("expected YEAR, MONTH or DAY")
 
     def from_item(self) -> FromItem:
+        if self.accept_op("("):  # derived table: (SELECT ...) alias
+            sub = self.subselect()
+            self.expect_op(")")
+            self.accept_kw("as")
+            alias = self.identifier("derived-table alias")
+            return FromItem("", alias, sub)
         table = self.identifier("table name")
         alias = table
         if self.accept_kw("as"):
@@ -402,6 +476,10 @@ class _Parser:
         negated = self.accept_kw("not")
         if self.accept_kw("in"):
             self.expect_op("(")
+            if self.at_kw("select"):
+                sub = self.subselect()
+                self.expect_op(")")
+                return SInSub(e, sub, negated)
             vals = [self.additive()]
             while self.accept_op(","):
                 vals.append(self.additive())
@@ -460,9 +538,18 @@ class _Parser:
     def primary(self):
         t = self.cur
         if self.accept_op("("):
+            if self.at_kw("select"):  # scalar subquery
+                sub = self.subselect()
+                self.expect_op(")")
+                return SSub(sub)
             e = self.expr()
             self.expect_op(")")
             return e
+        if self.accept_kw("exists"):
+            self.expect_op("(")
+            sub = self.subselect()
+            self.expect_op(")")
+            return SExists(sub)
         if t.kind == "num":
             self.advance()
             return SLit(float(t.text) if "." in t.text else int(t.text))
@@ -620,16 +707,21 @@ def transform(e, fn):
     return fn(e)
 
 
+def _sql_str(s: str) -> str:
+    return "'" + s.replace("'", "''") + "'"
+
+
 def format_expr(e) -> str:
-    """Compact SQL-ish rendering for explain()."""
+    """SQL rendering for explain(); simple expressions re-parse to an
+    equal AST (see the round-trip tests)."""
     if isinstance(e, SCol):
         return e.internal
     if isinstance(e, SLit):
-        return repr(e.value) if isinstance(e.value, str) else str(e.value)
+        return _sql_str(e.value) if isinstance(e.value, str) else str(e.value)
     if isinstance(e, SDate):
         return f"DATE '{e.text}'"
     if isinstance(e, SInterval):
-        return f"INTERVAL {e.days} DAY"
+        return f"INTERVAL '{e.days}' DAY"
     if isinstance(e, SBin):
         return f"({format_expr(e.a)} {e.op} {format_expr(e.b)})"
     if isinstance(e, SCmp):
@@ -649,14 +741,16 @@ def format_expr(e) -> str:
             f"{format_expr(e.lo)} AND {format_expr(e.hi)})"
         )
     if isinstance(e, SLike):
-        return f"({format_expr(e.e)} {'NOT ' if e.negated else ''}LIKE '{e.pattern}')"
+        pat = _sql_str(e.pattern)
+        return f"({format_expr(e.e)} {'NOT ' if e.negated else ''}LIKE {pat})"
     if isinstance(e, SIsNull):
         return f"({format_expr(e.e)} IS {'NOT ' if e.negated else ''}NULL)"
     if isinstance(e, SCase):
         parts = " ".join(
             f"WHEN {format_expr(c)} THEN {format_expr(r)}" for c, r in e.whens
         )
-        return f"CASE {parts} ELSE {format_expr(e.default)} END"
+        tail = "" if e.default == SLit(None) else f" ELSE {format_expr(e.default)}"
+        return f"CASE {parts}{tail} END"
     if isinstance(e, SExtract):
         return f"EXTRACT({e.field.upper()} FROM {format_expr(e.e)})"
     if isinstance(e, SFunc):
@@ -667,4 +761,53 @@ def format_expr(e) -> str:
         return f"{e.name.upper()}({d}{inner})"
     if isinstance(e, SStar):
         return "*"
+    if isinstance(e, SSub):
+        return f"({format_select(e.select.v)})"
+    if isinstance(e, SInSub):
+        neg = "NOT " if e.negated else ""
+        return f"({format_expr(e.e)} {neg}IN ({format_select(e.select.v)}))"
+    if isinstance(e, SExists):
+        neg = "NOT " if e.negated else ""
+        return f"({neg}EXISTS ({format_select(e.select.v)}))"
+    if hasattr(e, "render"):  # planned subquery markers (plan.py)
+        return e.render()
     return repr(e)
+
+
+def format_select(sel: Select) -> str:
+    """Render a statement AST back to SQL text (single line).
+
+    The output re-parses to an equal AST, which the round-trip tests
+    rely on; it is also used by explain() for unplanned subqueries."""
+    cols = ", ".join(
+        ("*" if isinstance(e, SStar) else format_expr(e))
+        + (f" AS {a}" if a else "")
+        for e, a in sel.columns
+    )
+    def item_sql(it: FromItem) -> str:
+        if it.sub is not None:
+            return f"({format_select(it.sub.v)}) AS {it.alias}"
+        if it.alias != it.table:
+            return f"{it.table} {it.alias}"
+        return it.table
+
+    items = ", ".join(item_sql(it) for it in sel.from_items)
+    out = f"SELECT {'DISTINCT ' if sel.distinct else ''}{cols} FROM {items}"
+    for jc in sel.joins:
+        out += (
+            f" {jc.how.upper()} JOIN {item_sql(jc.item)} "
+            f"ON {format_expr(jc.on)}"
+        )
+    if sel.where is not None:
+        out += f" WHERE {format_expr(sel.where)}"
+    if sel.group_by:
+        out += " GROUP BY " + ", ".join(format_expr(g) for g in sel.group_by)
+    if sel.having is not None:
+        out += f" HAVING {format_expr(sel.having)}"
+    if sel.order_by:
+        out += " ORDER BY " + ", ".join(
+            f"{format_expr(e)} {'ASC' if asc else 'DESC'}" for e, asc in sel.order_by
+        )
+    if sel.limit is not None:
+        out += f" LIMIT {sel.limit}"
+    return out

@@ -19,7 +19,7 @@ import json
 import os
 import re
 import shutil
-from typing import Any, Dict, Optional
+from typing import Any, Optional
 
 import numpy as np
 import jax

@@ -15,7 +15,6 @@ import logging
 import queue
 import signal
 import threading
-import time
 from typing import Any, Callable, Dict, Iterator, Optional
 
 import jax

@@ -6,9 +6,8 @@ chips (see EXPERIMENTS.md §Dry-run).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Tuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -4,7 +4,7 @@ with the compute of microbatch i+1), optimizer apply, loss metrics.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -194,8 +194,6 @@ def test_ssd_chunked_matches_naive_scan():
 
 def test_moe_dispatch_capacity():
     """Tokens above expert capacity are dropped, not corrupted."""
-    from repro.models import layers
-    from repro.models.config import MoEConfig
 
     cfg = reduced(get("dbrx-132b"))
     params = lm.init_params(cfg, jax.random.PRNGKey(8))

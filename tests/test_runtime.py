@@ -14,7 +14,6 @@ from repro.models import lm
 from repro.models.config import reduced
 from repro.train import checkpoint
 from repro.train.loop import PrefetchIterator, TrainLoop
-from repro.train.optimizer import adafactor, adamw
 from repro.train.train_step import init_train_state, make_train_step
 
 

@@ -24,15 +24,13 @@ from repro.sql.parser import (
     SOr,
     parse,
 )
-from repro.sql.optimize import fold_expr, optimize
+from repro.sql.optimize import fold_expr
 from repro.sql.plan import (
     Aggregate,
     Filter,
     Join,
-    Limit,
     Project,
     Scan,
-    Sort,
     build_plan,
     format_plan,
 )
@@ -273,7 +271,7 @@ def test_fold_inside_plan_via_explain(scope):
     assert "> 15" in opt
     # the naive plan still shows the raw expressions
     naive = txt.split("== optimized plan ==")[0]
-    assert "INTERVAL 31 DAY" in naive
+    assert "INTERVAL '31' DAY" in naive
 
 
 # ----------------------------------------------------------------------
@@ -510,3 +508,340 @@ def test_queries_scope_registry():
         queries.scope("nosuch")
     frames = queries.scope("tpch", sf=0.0005, seed=3)
     assert "lineitem" in frames and frames["lineitem"].nrows > 0
+
+
+# ----------------------------------------------------------------------
+# parser error paths (PR 2 satellites)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "bad, msg",
+    [
+        ("SELECT 'unterminated FROM t", "unexpected character"),
+        ("SELECT a FROM t WHERE b = 'still open", "unexpected character"),
+        ("SELECT id FROM emp WHERE sal IN (", "expected an expression"),
+        ("SELECT id FROM emp WHERE EXISTS sal", "expected '('"),
+        ("SELECT a FROM (SELECT b FROM t)", "derived-table alias"),
+    ],
+)
+def test_parse_error_paths(bad, msg):
+    with pytest.raises(SqlError) as ei:
+        parse(bad)
+    assert msg in str(ei.value)
+
+
+def test_unknown_aggregate_name_rejected_at_plan_time():
+    with pytest.raises(SqlError) as ei:
+        build_plan(
+            parse("SELECT MEDIAN(sal) AS m FROM emp GROUP BY dept"), CATALOG
+        )
+    assert "unknown function 'MEDIAN'" in str(ei.value)
+    assert "SUM" in str(ei.value)  # names what IS supported
+
+
+def test_distinct_outside_count_rejected():
+    with pytest.raises(SqlError) as ei:
+        build_plan(
+            parse("SELECT SUM(DISTINCT sal) AS s FROM emp GROUP BY dept"),
+            CATALOG,
+        )
+    assert "DISTINCT is only supported inside COUNT" in str(ei.value)
+
+
+# ----------------------------------------------------------------------
+# round trip: rendered expressions/statements re-parse to equal ASTs
+# ----------------------------------------------------------------------
+ROUNDTRIP_QUERIES = [
+    "SELECT a, b AS bee FROM t WHERE a > 1 ORDER BY a DESC LIMIT 3",
+    "SELECT a FROM t WHERE a IN (1, 2) AND b NOT LIKE 'x%' "
+    "AND c BETWEEN 1 AND 5 AND d IS NOT NULL AND NOT e = 1",
+    "SELECT CASE WHEN a = 1 THEN 2 ELSE 0 END AS c, "
+    "EXTRACT(YEAR FROM d) AS y, DATE '1994-01-01' AS t0 FROM t",
+    "SELECT COUNT(*) AS n, COUNT(DISTINCT a) AS u, SUM(b + 1) AS s FROM t "
+    "GROUP BY g HAVING COUNT(*) > 2",
+    "SELECT DISTINCT a FROM t WHERE s = 'it''s' OR a * 2 < b / 3",
+    "SELECT a FROM t WHERE d < DATE '1995-06-01' - INTERVAL '90' DAY",
+    "SELECT a FROM t LEFT JOIN u ON t.k = u.k WHERE u.v IS NULL",
+    "SELECT a FROM t WHERE EXISTS (SELECT * FROM u WHERE u.k = t.a)",
+    "SELECT a FROM t WHERE b NOT IN (SELECT k FROM u WHERE w > 0)",
+    "SELECT a FROM t WHERE c > (SELECT MAX(k) FROM u)",
+    "SELECT x, SUM(v) AS s FROM (SELECT a AS x, b AS v FROM t) d GROUP BY x",
+    "SELECT SUBSTRING(p, 1, 2) AS cc FROM t WHERE CASE WHEN a = 1 THEN 2 END = 2",
+]
+
+
+@pytest.mark.parametrize("q", ROUNDTRIP_QUERIES)
+def test_format_select_round_trips(q):
+    from repro.sql.parser import format_select
+
+    ast = parse(q)
+    rendered = format_select(ast)
+    assert parse(rendered) == ast, rendered
+
+
+def test_format_expr_round_trips_where_clause():
+    from repro.sql.parser import format_expr
+
+    ast = parse(
+        "SELECT a FROM t WHERE a IN (1, 2) AND b LIKE 'x%' AND "
+        "c BETWEEN 1 AND 5 AND NOT d = DATE '1994-01-01' AND e + 1 > 2 * f"
+    )
+    rendered = format_expr(ast.where)
+    reparsed = parse(f"SELECT a FROM t WHERE {rendered}").where
+    assert reparsed == ast.where
+
+
+# ----------------------------------------------------------------------
+# subqueries: planning, decorrelation, execution (tiny frames)
+# ----------------------------------------------------------------------
+def _threeway(q, scope_frames_):
+    """engine result == oracle interpretation of the naive plan."""
+    from repro.sql.oracle_backend import execute_oracle
+
+    got = sql.execute(q, scope_frames_)
+    godf = orc_frame_to_odf(got)
+    naive = sql.plan_query(q, scope_frames_, optimized=False)
+    tables = {
+        name: {c: np.asarray(f.column(c)) for c in f.column_names}
+        for name, f in scope_frames_.items()
+    }
+    ora = execute_oracle(naive, tables)
+    from repro.core import oracle as orc
+
+    orc.assert_odf_equal(godf, ora, sort=True, rtol=1e-9)
+    return godf
+
+
+def orc_frame_to_odf(f):
+    from repro.core import oracle as orc
+
+    return orc.frame_to_odf(f)
+
+
+def test_exists_decorrelates_to_semi_join(scope):
+    q = (
+        "SELECT id FROM emp e WHERE EXISTS "
+        "(SELECT * FROM dept d WHERE d.name = e.dept AND d.loc = 'x') "
+        "ORDER BY id"
+    )
+    assert _threeway(q, scope) == {"id": [0, 2, 3, 5]}
+    opt = sql.explain(q, scope).split("== optimized plan ==")[1]
+    assert "Join semi on [e.dept = d.name]" in opt
+    assert "EXISTS" not in opt
+
+
+def test_not_exists_decorrelates_to_anti_join(scope):
+    q = (
+        "SELECT id FROM emp e WHERE NOT EXISTS "
+        "(SELECT * FROM dept d WHERE d.name = e.dept AND d.loc = 'x') "
+        "ORDER BY id"
+    )
+    assert _threeway(q, scope) == {"id": [1, 4]}
+    opt = sql.explain(q, scope).split("== optimized plan ==")[1]
+    assert "Join anti on [e.dept = d.name]" in opt
+
+
+def test_in_subquery_decorrelates_to_semi_join(scope):
+    q = (
+        "SELECT id FROM emp e WHERE dept IN "
+        "(SELECT name FROM dept d WHERE budget > 150) ORDER BY id"
+    )
+    assert _threeway(q, scope) == {"id": [1, 3, 4]}
+    opt = sql.explain(q, scope).split("== optimized plan ==")[1]
+    assert "Join semi on [e.dept = name]" in opt
+
+
+def test_not_in_subquery_decorrelates_to_anti_join(scope):
+    q = (
+        "SELECT id FROM emp e WHERE dept NOT IN "
+        "(SELECT name FROM dept d WHERE budget > 150) ORDER BY id"
+    )
+    assert _threeway(q, scope) == {"id": [0, 2, 5]}
+    opt = sql.explain(q, scope).split("== optimized plan ==")[1]
+    assert "Join anti on" in opt
+
+
+def test_uncorrelated_scalar_attaches_constant(scope):
+    q = (
+        "SELECT id FROM emp e WHERE sal > (SELECT AVG(sal) FROM emp e2) "
+        "ORDER BY id"
+    )
+    assert _threeway(q, scope) == {"id": [3, 4, 5]}
+    opt = sql.explain(q, scope).split("== optimized plan ==")[1]
+    assert "AttachScalar" in opt
+
+
+def test_correlated_scalar_becomes_groupby_join(scope):
+    q = (
+        "SELECT id FROM emp e, dept d WHERE dept = name AND "
+        "sal > (SELECT AVG(e2.sal) FROM emp e2 WHERE e2.dept = d.name) "
+        "ORDER BY id"
+    )
+    assert _threeway(q, scope) == {"id": [4, 5]}
+    opt = sql.explain(q, scope).split("== optimized plan ==")[1]
+    assert "Aggregate keys=[e2.dept]" in opt
+    assert "Join inner on [d.name = e2.dept]" in opt
+
+
+def test_exists_with_neq_residual(scope):
+    # the q21 shape: another emp in the same dept with a different id
+    q = (
+        "SELECT id FROM emp e1 WHERE EXISTS (SELECT * FROM emp e2 "
+        "WHERE e2.dept = e1.dept AND e2.id <> e1.id) ORDER BY id"
+    )
+    # depts a (ids 0,2,5) and b (1,4) have >= 2 members; c (3) does not
+    assert _threeway(q, scope) == {"id": [0, 1, 2, 4, 5]}
+    opt = sql.explain(q, scope).split("== optimized plan ==")[1]
+    assert "Join semi on" in opt and "Join anti on" in opt
+    assert "NUNIQUE" in opt
+
+
+def test_derived_table_in_from(scope):
+    q = (
+        "SELECT loc, SUM(n) AS total FROM "
+        "(SELECT dept AS dd, COUNT(*) AS n FROM emp GROUP BY dept) t, dept "
+        "WHERE dd = name GROUP BY loc ORDER BY loc"
+    )
+    assert _threeway(q, scope) == {"loc": ["x", "y"], "total": [4, 2]}
+
+
+def test_select_distinct(scope):
+    q = "SELECT DISTINCT dept FROM emp ORDER BY dept"
+    assert _threeway(q, scope) == {"dept": ["a", "b", "c"]}
+
+
+def test_correlated_count_rejected(scope):
+    with pytest.raises(SqlError) as ei:
+        sql.execute(
+            "SELECT id FROM emp e WHERE 1 < "
+            "(SELECT COUNT(*) FROM emp e2 WHERE e2.dept = e.dept)",
+            scope,
+        )
+    assert "COUNT" in str(ei.value)
+
+
+def test_alias_shadowing_rejected(scope):
+    with pytest.raises(SqlError) as ei:
+        sql.execute(
+            "SELECT id FROM emp WHERE EXISTS "
+            "(SELECT * FROM emp WHERE sal > 10)",
+            scope,
+        )
+    assert "shadows" in str(ei.value)
+
+
+def test_subquery_in_or_rejected(scope):
+    with pytest.raises(SqlError) as ei:
+        sql.execute(
+            "SELECT id FROM emp e WHERE sal > 50 OR EXISTS "
+            "(SELECT * FROM dept d WHERE d.name = e.dept)",
+            scope,
+        )
+    assert "top-level AND conjuncts" in str(ei.value)
+
+
+def test_scalar_subquery_multiple_columns_rejected(scope):
+    with pytest.raises(SqlError) as ei:
+        sql.execute(
+            "SELECT id FROM emp e WHERE sal > (SELECT sal, id FROM emp e2)",
+            scope,
+        )
+    assert "exactly one column" in str(ei.value)
+
+
+def test_limit_inside_subquery_rejected(scope):
+    with pytest.raises(SqlError) as ei:
+        sql.execute(
+            "SELECT id FROM emp e WHERE dept IN "
+            "(SELECT name FROM dept d ORDER BY name LIMIT 1)",
+            scope,
+        )
+    assert "LIMIT inside IN subqueries" in str(ei.value)
+
+
+def test_distinct_inside_scalar_subquery_rejected(scope):
+    with pytest.raises(SqlError) as ei:
+        sql.execute(
+            "SELECT id FROM emp e WHERE sal > (SELECT DISTINCT sal FROM emp e2)",
+            scope,
+        )
+    assert "DISTINCT inside scalar subqueries" in str(ei.value)
+
+
+def test_distinct_inside_in_subquery_is_harmless(scope):
+    q = (
+        "SELECT id FROM emp e WHERE dept IN "
+        "(SELECT DISTINCT name FROM dept d WHERE budget > 150) ORDER BY id"
+    )
+    assert _threeway(q, scope) == {"id": [1, 3, 4]}
+
+
+def test_empty_scalar_subquery_is_null_like(scope):
+    # zero-row scalar subquery -> NULL: every comparison is false, on
+    # both the engine (NaN constant) and the oracle (None)
+    q = (
+        "SELECT id FROM emp e WHERE sal > "
+        "(SELECT e2.sal FROM emp e2 WHERE e2.sal > 1000) ORDER BY id"
+    )
+    assert _threeway(q, scope) == {"id": []}
+
+
+def test_string_scalar_subquery(scope):
+    q = (
+        "SELECT id FROM emp e WHERE dept = "
+        "(SELECT d.name FROM dept d WHERE d.budget = 200) ORDER BY id"
+    )
+    assert _threeway(q, scope) == {"id": [1, 4]}
+
+
+def test_uncorrelated_empty_sum_is_zero(scope):
+    # pandas-style SUM() over empty = 0.0, consistently on both legs
+    q = (
+        "SELECT id FROM emp e WHERE sal > "
+        "(SELECT SUM(e2.sal) FROM emp e2 WHERE e2.sal > 1000) ORDER BY id"
+    )
+    assert _threeway(q, scope) == {"id": [0, 1, 2, 3, 4, 5]}
+
+
+def test_format_select_round_trips_joined_derived_table():
+    from repro.sql.parser import format_select
+
+    ast = parse("SELECT a FROM t INNER JOIN (SELECT k FROM u) d ON t.a = d.k")
+    assert parse(format_select(ast)) == ast
+
+
+def test_uncorrelated_scalar_subquery_in_select_list(scope):
+    q = (
+        "SELECT id, sal - (SELECT AVG(e2.sal) FROM emp e2) AS delta "
+        "FROM emp e ORDER BY id"
+    )
+    got = _threeway(q, scope)
+    assert got["id"] == [0, 1, 2, 3, 4, 5]
+    assert got["delta"][0] == pytest.approx(10.0 - 35.0)
+
+
+def test_correlated_scalar_in_select_list_rejected(scope):
+    with pytest.raises(SqlError) as ei:
+        sql.execute(
+            "SELECT id, (SELECT AVG(e2.sal) FROM emp e2 "
+            "WHERE e2.dept = e.dept) AS davg FROM emp e",
+            scope,
+        )
+    assert "SELECT list" in str(ei.value)
+
+
+def test_not_in_with_null_producing_subquery_uses_join_semantics(scope):
+    # the derived left join NULL-extends loc for depts without... here:
+    # emp rows whose dept has no entry in the filtered dept list yield
+    # NULLs in the subquery output; both legs must agree on join
+    # semantics (NULLs never match) rather than three-valued NOT IN
+    q = (
+        "SELECT name FROM dept WHERE name NOT IN "
+        "(SELECT dd FROM (SELECT d2.name AS nm, e2.dept AS dd "
+        " FROM dept d2 LEFT JOIN emp e2 ON d2.name = e2.dept "
+        "   AND e2.sal > 45) j) "
+        "ORDER BY name"
+    )
+    # only a (sal 60) and b (50) have > 45 emps; c NULL-extends, so the
+    # list is [a, b, NULL].  Join semantics keep c (three-valued SQL
+    # would return no rows at all).
+    assert _threeway(q, scope) == {"name": ["c"]}
