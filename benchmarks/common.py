@@ -55,6 +55,47 @@ def write_json(path: str) -> None:
     print(f"# wrote {len(ROWS)} rows to {path}", flush=True)
 
 
+def compare_baseline(path: str, *, factor: float = 2.5, min_us: float = 500.0) -> bool:
+    """Gate the collected ROWS against a committed baseline document.
+
+    Returns False (and prints the offenders) when any row shared with
+    the baseline got more than ``factor`` times slower.  Rows faster
+    than ``min_us`` in this run are ignored — micro-rows on shared CI
+    runners are too noisy to gate on.  Rows missing from either side
+    (new benchmarks, retired benchmarks) never fail the gate.
+    """
+    with open(path) as fh:
+        doc = json.load(fh)
+    base = {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])}
+    offenders = []
+    # a crashed suite would otherwise produce no comparable rows and
+    # sail through the gate (and poison the next baseline refresh)
+    crashed = [name for name, _, _ in ROWS if "SUITE_ERROR" in name]
+    compared = 0
+    for name, us, _ in ROWS:
+        b = base.get(name)
+        if b is None or b <= 0 or "SUITE_ERROR" in name:
+            continue
+        compared += 1
+        if us > min_us and us > factor * b:
+            offenders.append((name, b, us))
+    for name, b, us in offenders:
+        print(
+            f"# REGRESSION {name}: {b:.1f}us -> {us:.1f}us "
+            f"({us / b:.2f}x, limit {factor}x)",
+            flush=True,
+        )
+    for name in crashed:
+        print(f"# SUITE CRASHED: {name} — failing the gate", flush=True)
+    print(
+        f"# compare: {compared} rows vs {path}, "
+        f"{len(offenders)} regression(s) beyond {factor}x, "
+        f"{len(crashed)} crashed suite(s)",
+        flush=True,
+    )
+    return not offenders and not crashed
+
+
 @functools.lru_cache(maxsize=4)
 def tpch_tables(sf: float, seed: int = 0):
     from repro.data import tpch

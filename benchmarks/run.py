@@ -2,16 +2,21 @@
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only name,...]
                                             [--json out.json]
+                                            [--compare baseline.json]
 
 Prints ``name,us_per_call,derived`` CSV rows (see common.report);
 ``--json PATH`` additionally writes the rows as a JSON document (the CI
-bench-smoke job uploads it as the ``BENCH_PR.json`` artifact).
+bench-smoke job uploads it as the ``BENCH_PR.json`` artifact), and
+``--compare PATH`` gates the run against a committed baseline document
+(exit 1 on any shared row slower than 2.5x — the CI regression gate;
+the baseline refreshes from main pushes).
 Default is quick mode (small scale factors) so the whole suite runs in
 minutes on CPU; --full uses larger data.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 
@@ -26,6 +31,12 @@ def main() -> None:
         metavar="PATH",
         help="also write the result rows as a JSON document",
     )
+    ap.add_argument(
+        "--compare",
+        default="",
+        metavar="BASELINE",
+        help="fail (exit 1) if any row regresses >2.5x vs this baseline JSON",
+    )
     args = ap.parse_args()
     quick = not args.full
     sf = args.sf or (0.01 if quick else 0.05)
@@ -33,6 +44,7 @@ def main() -> None:
     from . import (
         bench_compile,
         bench_cores,
+        bench_dist,
         bench_loading,
         bench_memory,
         bench_operators,
@@ -45,6 +57,7 @@ def main() -> None:
 
     suites = {
         "tpch": lambda: bench_tpch.run(sf=sf, quick=quick),
+        "dist": lambda: bench_dist.run(quick=quick),
         "tpcds": lambda: bench_tpcds.run(sf=sf, quick=quick),
         "sql": lambda: bench_sql.run(sf=sf, quick=quick),
         "operators": lambda: bench_operators.run(sf=sf, quick=quick),
@@ -71,6 +84,11 @@ def main() -> None:
         from .common import write_json
 
         write_json(args.json)
+    if args.compare:
+        from .common import compare_baseline
+
+        if not compare_baseline(args.compare):
+            sys.exit(1)
 
 
 if __name__ == "__main__":

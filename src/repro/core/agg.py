@@ -50,6 +50,24 @@ def _count_weights(frame: TensorFrame, name: str) -> jax.Array:
     return valid.astype(INT)
 
 
+def _segment_sum(vals: jax.Array, gids: jax.Array, m: int) -> jax.Array:
+    """Segment sum with an optional sharded route.
+
+    The single-device path is the plain XLA segment op; when the
+    distributed route is enabled (CONFIG.distributed / device count, see
+    repro.dist.dframe.dist_enabled) the reduction runs as shard-local
+    dense sums + psum over a data mesh spanning all visible devices.
+    """
+    from repro.core.config import CONFIG
+
+    if CONFIG.distributed != "off":
+        from repro.dist import dframe
+
+        if dframe.dist_enabled(int(vals.shape[0])):
+            return dframe.dist_groupby_sum(dframe.data_mesh(), gids, vals, m)
+    return jax.ops.segment_sum(vals, gids, m)
+
+
 # ----------------------------------------------------------------------
 # segment (grouped) aggregation
 # ----------------------------------------------------------------------
@@ -61,9 +79,9 @@ def segment_agg(
     colname: str,
 ):
     if fn == "size":
-        return jax.ops.segment_sum(jnp.ones((frame.nrows,), dtype=INT), gids, m)
+        return _segment_sum(jnp.ones((frame.nrows,), dtype=INT), gids, m)
     if fn == "count":
-        return jax.ops.segment_sum(_count_weights(frame, colname), gids, m)
+        return _segment_sum(_count_weights(frame, colname), gids, m)
     if fn == "nunique":
         return _segment_nunique(frame, gids, m, colname)
     if fn == "first":
@@ -79,12 +97,12 @@ def segment_agg(
     if fn == "sum":
         if valid is not None:
             vals = jnp.where(valid, vals, jnp.zeros((), dtype=vals.dtype))
-        return jax.ops.segment_sum(vals, gids, m)
+        return _segment_sum(vals, gids, m)
     if fn == "mean":
         if valid is not None:
             vals = jnp.where(valid, vals, jnp.zeros((), dtype=vals.dtype))
-        s = jax.ops.segment_sum(vals.astype(float_dtype()), gids, m)
-        c = jax.ops.segment_sum(_count_weights(frame, colname), gids, m)
+        s = _segment_sum(vals.astype(float_dtype()), gids, m)
+        c = _segment_sum(_count_weights(frame, colname), gids, m)
         return s / jnp.maximum(c, 1).astype(float_dtype())
     if fn == "min":
         if valid is not None:

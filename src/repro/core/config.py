@@ -24,6 +24,13 @@ class EngineConfig:
     use_device_strings: bool = False
     # Maximum packed string width for the device string path.
     max_packed_len: int = 128
+    # Distributed execution route (repro.dist): 'off' never shards,
+    # 'force' always takes the sharded route (tests exercise it on a
+    # 1-device mesh), 'auto' shards group-by reduction sums and
+    # semi/anti-join probes when more than one device is visible and the
+    # input has at least dist_min_rows rows.
+    distributed: str = "auto"
+    dist_min_rows: int = 1 << 16
 
 
 CONFIG = EngineConfig()

@@ -186,6 +186,20 @@ def membership(probe: jax.Array, build: jax.Array) -> jax.Array:
     return (sb[pos] == probe) & (probe >= 0)
 
 
+def _membership_routed(probe: jax.Array, build: jax.Array) -> jax.Array:
+    """Membership with an optional sharded route: the probe side shards
+    over a data mesh, the (small) build side broadcasts to every shard
+    (repro.dist.dframe.dist_semi_join_mask)."""
+    from .config import CONFIG
+
+    if CONFIG.distributed != "off" and int(build.shape[0]) > 0:
+        from repro.dist import dframe
+
+        if dframe.dist_enabled(int(probe.shape[0])):
+            return dframe.dist_semi_join_mask(dframe.data_mesh(), probe, build)
+    return membership(probe, build)
+
+
 # ----------------------------------------------------------------------
 # frame stitching
 # ----------------------------------------------------------------------
@@ -306,7 +320,7 @@ def join(
             rcodes = jnp.where(v, rcodes, np.int64(-2))
 
     if how in ("semi", "anti"):
-        exists = membership(lcodes, rcodes)
+        exists = _membership_routed(lcodes, rcodes)
         return left.mask_rows(exists if how == "semi" else ~exists)
     if how not in ("inner", "left"):
         raise ValueError(f"unsupported join type {how!r}")

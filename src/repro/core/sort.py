@@ -28,7 +28,14 @@ def sort_values(
     frame: TensorFrame,
     by: Union[str, Sequence[str]],
     ascending: Union[bool, Sequence[bool]] = True,
+    stable: bool = True,
 ) -> TensorFrame:
+    """Multi-key sort; ``stable`` (default) breaks ties by original row
+    position, so equal-key rows keep their input order.  That makes
+    ``head``/``LIMIT`` after a sort deterministic and matches any
+    stable reference implementation (e.g. Python's ``sorted``) —
+    descending keys are negated, which preserves tie order, unlike a
+    post-hoc reversal."""
     by = [by] if isinstance(by, str) else list(by)
     if isinstance(ascending, bool):
         ascending = [ascending] * len(by)
@@ -40,6 +47,10 @@ def sort_values(
         if not asc:
             k = -k
         keys.append(k)
-    # lexsort: last key is primary -> reverse our by-list
-    order = jnp.lexsort(tuple(reversed(keys))).astype(INT)
+    # lexsort: last key is primary -> reverse our by-list; the stable
+    # tiebreak (original row index) goes first = least significant
+    keys = list(reversed(keys))
+    if stable:
+        keys.insert(0, jnp.arange(frame.nrows, dtype=INT))
+    order = jnp.lexsort(tuple(keys)).astype(INT)
     return frame.take(order)

@@ -1,0 +1,50 @@
+"""Distributed execution subsystem (``repro.dist``).
+
+Scales the single-device TensorFrame kernels past one accelerator:
+
+- ``dframe`` — sharded relational ops over a 1-D ``data`` mesh axis:
+  dense group-by sums via shard-local segment reduction + ``psum``,
+  semi-join membership via broadcast build sides, and a hash-partition
+  all-to-all repartition with capacity/overflow accounting.
+- ``compression`` — per-block int8 gradient quantization with
+  error-feedback residuals and a ``compressed_mean`` collective for the
+  training leg (1-bit/error-feedback SGD lineage).
+- ``pipeline`` — a GPipe-style microbatch pipeline schedule over a
+  ``pipe`` mesh axis using ``ppermute`` stage-to-stage shifts.
+
+All ops are ``shard_map`` programs that accept *global* arrays plus a
+mesh, and degrade gracefully to a 1-device mesh (single-device
+fallback), so the same code path runs in CPU tests and on real
+multi-device topologies (``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+for forced host devices).
+
+The relational ops are wired into the engine: ``TensorFrame.groupby``
+aggregation sums and semi/anti-join probes route here when
+``repro.core.config.CONFIG.distributed`` allows it (see
+``dframe.dist_enabled``).
+"""
+from . import compression, dframe, pipeline
+from .dframe import (
+    data_mesh,
+    dist_enabled,
+    dist_groupby_sum,
+    dist_repartition_by_key,
+    dist_semi_join_mask,
+)
+from .compression import compressed_mean, dequantize, quantize
+from .pipeline import pipeline_forward
+
+__all__ = [
+    "compression",
+    "dframe",
+    "pipeline",
+    "data_mesh",
+    "dist_enabled",
+    "dist_groupby_sum",
+    "dist_repartition_by_key",
+    "dist_semi_join_mask",
+    "compressed_mean",
+    "dequantize",
+    "quantize",
+    "pipeline_forward",
+]

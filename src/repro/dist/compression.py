@@ -1,0 +1,70 @@
+"""Gradient compression: per-block int8 quantization + error feedback.
+
+The training leg's answer to interconnect-bound data parallelism
+(1-bit / error-feedback SGD lineage): each device quantizes its local
+gradient to int8 with one float32 scale per 256-element block, the
+all-reduce runs over the dequantized tensors, and the quantization
+error is *kept locally* as a residual to be added back into the next
+step's gradient — so the error feeds back instead of accumulating.
+
+``quantize`` is the jnp reference of the Pallas quantization-kernel
+pattern (block-wise absmax scales); a TPU deployment would swap the
+body for the stochastic-rounding kernel without changing the contract.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize(
+    x: jax.Array, block: int = BLOCK, resid: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-block symmetric int8 quantization with error feedback.
+
+    ``resid`` (the previous step's residual) is added to ``x`` before
+    quantizing.  Returns ``(q, scales, residual)``:
+
+    - ``q``: int8 codes, length padded up to a block multiple,
+    - ``scales``: float32 ``(nblocks, 1)`` per-block scales
+      (``dequantized = q.reshape(-1, block) * scales``),
+    - ``residual``: ``x + resid - dequantized`` over the original
+      (unpadded) length — the error to feed back next step.
+    """
+    n = x.shape[0]
+    if resid is not None:
+        x = x + resid
+    pad = (-n) % block
+    xb = jnp.pad(x, (0, pad)).reshape(-1, block)
+    absmax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    scales = jnp.where(absmax > 0, absmax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(xb / scales), -127, 127).astype(jnp.int8)
+    deq = (q.astype(x.dtype) * scales).reshape(-1)[:n]
+    return q.reshape(-1), scales, x - deq
+
+
+def dequantize(q: jax.Array, scales: jax.Array, n: Optional[int] = None) -> jax.Array:
+    """Invert ``quantize``: codes * per-block scales, cut back to ``n``."""
+    nblocks = scales.shape[0]
+    out = (q.astype(scales.dtype).reshape(nblocks, -1) * scales).reshape(-1)
+    return out if n is None else out[:n]
+
+
+def compressed_mean(
+    x: jax.Array, axis_name: str, resid: Optional[jax.Array] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean of ``x`` over a mesh axis, communicating quantized values.
+
+    Call inside ``shard_map``: each device quantizes its local shard
+    (after folding in ``resid``), the mean is taken over the
+    dequantized tensors with one ``psum``, and the local quantization
+    error comes back as the residual for error feedback.
+    """
+    q, scales, residual = quantize(x, resid=resid)
+    deq = dequantize(q, scales, x.shape[0]).astype(x.dtype)
+    ndev = jax.lax.psum(jnp.ones((), x.dtype), axis_name)
+    return jax.lax.psum(deq, axis_name) / ndev, residual

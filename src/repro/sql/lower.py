@@ -14,6 +14,7 @@ from __future__ import annotations
 from typing import Dict, List
 
 import numpy as np
+import jax.numpy as jnp
 
 from repro.core import TensorFrame, col, if_else, lit
 from repro.core.expr import DateLit, Expr
@@ -214,8 +215,10 @@ def lower_plan(node, frames: Dict[str, TensorFrame]) -> TensorFrame:
     if isinstance(node, Distinct):
         f = lower_plan(node.child, frames)
         cols = list(f.column_names)
-        deduped = f.groupby(cols).agg([("__distinct_n", "size", "")])
-        return deduped.select(cols)
+        # keep first-occurrence row order (stable, like the oracle's
+        # seen-set scan) so a later Sort+LIMIT breaks ties identically
+        rep = jnp.sort(f.groupby(cols).rep)
+        return f.take(rep).select(cols)
     if isinstance(node, AttachScalar):
         f = lower_plan(node.child, frames)
         sub = lower_plan(node.sub.v, frames)

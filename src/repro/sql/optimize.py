@@ -182,15 +182,26 @@ def _strip_wrappers(p, what, drop_project=False, drop_distinct=False):
 
     Sort never affects a subquery's value; Distinct is dropped only
     where duplicates cannot matter (EXISTS / IN membership).  LIMIT
-    would change the result and has no join rewrite, so it is rejected
-    rather than silently discarded."""
+    *does* change the result: an uncorrelated ``Limit(Sort(...))``
+    subtree is kept intact and executed directly (deterministic thanks
+    to the engine's stable tiebreak sort — LIMIT under sort ties picks
+    the same rows as any stable reference); nothing below it may be
+    stripped.  A correlated LIMIT has no join rewrite and is rejected.
+    """
     while True:
         if isinstance(p, Sort):
             p = p.child
         elif isinstance(p, Distinct) and drop_distinct:
             p = p.child
         elif isinstance(p, Limit):
-            raise SqlError(f"LIMIT inside {what} subqueries is not supported")
+            from .plan import plan_outer_refs
+
+            if plan_outer_refs(p):
+                raise SqlError(
+                    f"LIMIT inside correlated {what} subqueries is not "
+                    f"supported (no join rewrite preserves the cutoff)"
+                )
+            return p
         elif isinstance(p, Distinct):
             raise SqlError(
                 f"SELECT DISTINCT inside {what} subqueries is not supported"

@@ -10,7 +10,7 @@ deployment processes.
 import jax
 import pytest
 
-_X64_PREFIXES = ("test_core", "test_tpch", "test_tpcds", "test_sql")
+_X64_PREFIXES = ("test_core", "test_tpch", "test_tpcds", "test_sql", "test_dist")
 
 
 def pytest_configure(config):

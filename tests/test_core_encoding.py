@@ -1,0 +1,142 @@
+"""Edge cases for core/encoding.py: empty dictionaries, one-sided
+merges, all-null columns — plus the same paths exercised end-to-end
+through joins on empty string sides."""
+import numpy as np
+import pytest
+
+from repro.core import TensorFrame, encoding
+
+
+# ----------------------------------------------------------------------
+# factorize
+# ----------------------------------------------------------------------
+def test_factorize_empty():
+    codes, dictionary = encoding.factorize(np.array([], dtype=object))
+    assert codes.shape == (0,)
+    assert codes.dtype == np.int64
+    assert dictionary.shape == (0,)
+
+
+def test_factorize_single_value_column():
+    codes, dictionary = encoding.factorize(np.array(["x", "x", "x"], dtype=object))
+    assert list(codes) == [0, 0, 0]
+    assert list(dictionary) == ["x"]
+
+
+# ----------------------------------------------------------------------
+# merge_dictionaries: one-sided / both-empty
+# ----------------------------------------------------------------------
+def test_merge_dictionaries_left_empty():
+    da = np.array([], dtype="<U1")
+    db = np.array(["a", "c"])
+    merged, ra, rb = encoding.merge_dictionaries(da, db)
+    assert list(merged) == ["a", "c"]
+    assert ra.shape == (0,)
+    assert list(merged[rb]) == ["a", "c"]
+
+
+def test_merge_dictionaries_right_empty():
+    da = np.array(["b", "d"])
+    db = np.array([], dtype="<U1")
+    merged, ra, rb = encoding.merge_dictionaries(da, db)
+    assert list(merged) == ["b", "d"]
+    assert rb.shape == (0,)
+    assert list(merged[ra]) == ["b", "d"]
+
+
+def test_merge_dictionaries_both_empty():
+    e = np.array([], dtype="<U1")
+    merged, ra, rb = encoding.merge_dictionaries(e, e)
+    assert merged.shape == (0,) and ra.shape == (0,) and rb.shape == (0,)
+
+
+def test_merge_dictionaries_disjoint_and_overlap():
+    merged, ra, rb = encoding.merge_dictionaries(
+        np.array(["a", "c"]), np.array(["b", "c"])
+    )
+    assert list(merged) == ["a", "b", "c"]
+    assert list(merged[ra]) == ["a", "c"]
+    assert list(merged[rb]) == ["b", "c"]
+
+
+# ----------------------------------------------------------------------
+# shared numeric codes
+# ----------------------------------------------------------------------
+def test_shared_codes_numeric_one_side_empty():
+    ca, cb, domain = encoding.shared_codes_numeric(
+        np.array([], dtype=np.int64), np.array([5, 7, 5])
+    )
+    assert ca.shape == (0,)
+    assert domain == 2
+    assert list(cb) == [0, 1, 0]
+
+
+def test_cardinality_ratio_empty():
+    assert encoding.cardinality_ratio(np.array([], dtype=object)) == 0.0
+
+
+# ----------------------------------------------------------------------
+# through the engine: empty dictionaries in joins
+# ----------------------------------------------------------------------
+def _frame(keys, vals):
+    return TensorFrame.from_arrays(
+        {"k": np.asarray(keys, dtype=object), "v": np.asarray(vals, dtype=float)}
+    )
+
+
+def test_join_against_empty_string_side():
+    left = _frame(["a", "b", "a"], [1.0, 2.0, 3.0])
+    right = TensorFrame.from_arrays(
+        {"k": np.array([], dtype=object), "w": np.array([], dtype=float)}
+    )
+    inner = left.join(right, on="k", how="inner")
+    assert inner.nrows == 0
+    semi = left.join(right, on="k", how="semi")
+    assert semi.nrows == 0
+    anti = left.join(right, on="k", how="anti")
+    assert anti.nrows == 3
+
+
+def test_left_join_all_null_column_decodes_and_aggregates():
+    """No matches -> every right column is null; decoding yields None,
+    COUNT skips them, SUM treats them as zero contribution."""
+    left = _frame(["a", "b", "c"], [1.0, 2.0, 3.0])
+    right = TensorFrame.from_arrays(
+        {"k": np.array(["x", "y"], dtype=object), "w": np.array([10.0, 20.0])}
+    )
+    out = left.join(right, on="k", how="left")
+    assert out.nrows == 3
+    w = out.column("w")
+    assert np.isnan(w.astype(float)).all()
+    agg = out.groupby("k").agg([("n", "count", "w"), ("s", "sum", "w")])
+    assert list(agg.column("n")) == [0, 0, 0]
+    assert list(agg.column("s")) == [0.0, 0.0, 0.0]
+
+
+def test_groupby_on_empty_frame_dict_column():
+    f = TensorFrame.from_arrays(
+        {"k": np.array([], dtype=object), "v": np.array([], dtype=float)}
+    )
+    out = f.groupby("k").agg([("s", "sum", "v")])
+    assert out.nrows == 0
+
+
+def test_sort_empty_and_nunique_empty():
+    f = TensorFrame.from_arrays(
+        {"k": np.array([], dtype=object), "v": np.array([], dtype=float)}
+    )
+    assert f.sort_values("k").nrows == 0
+    assert f.nunique("k") == 0
+
+
+def test_stable_sort_tiebreak_keeps_input_order():
+    f = TensorFrame.from_arrays(
+        {"k": np.array([2, 1, 2, 1, 1, 2]), "v": np.arange(6)}
+    )
+    out = f.sort_values("k")
+    assert list(out.column("v")) == [1, 3, 4, 0, 2, 5]
+    # descending keys negate (not reverse): ties still keep input order
+    out_d = f.sort_values("k", ascending=False)
+    assert list(out_d.column("v")) == [0, 2, 5, 1, 3, 4]
+    with pytest.raises(ValueError):
+        f.sort_values(["k"], ascending=[True, False])

@@ -137,6 +137,30 @@ print("OK")
     )
 
 
+@requires_dist
+def test_repartition_lossless_under_skew():
+    """capacity >= n must mean dropped == 0 even when every row routes
+    to ONE destination shard and n does not divide the mesh size
+    (regression: floor-divided bucket sizing lost rows)."""
+    run_py(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.dist.dframe import dist_repartition_by_key
+
+mesh = jax.make_mesh((8,), ("data",))
+n = 500  # not a multiple of 8
+keys = jnp.asarray(np.full(n, 7, dtype=np.int64))  # all rows -> one shard
+vals = jnp.asarray(np.arange(n, dtype=np.float32))
+k2, v2, valid, dropped = dist_repartition_by_key(mesh, keys, vals, capacity=n)
+assert int(dropped) == 0, int(dropped)
+kept = np.asarray(v2)[np.asarray(valid)]
+assert kept.shape[0] == n
+np.testing.assert_allclose(np.sort(kept), np.arange(n, dtype=np.float32))
+print("OK")
+"""
+    )
+
+
 @pytest.mark.slow
 def test_elastic_checkpoint_reshard():
     """Checkpoint on a 1-device run restores onto an 8-device mesh."""

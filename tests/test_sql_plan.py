@@ -748,14 +748,55 @@ def test_scalar_subquery_multiple_columns_rejected(scope):
     assert "exactly one column" in str(ei.value)
 
 
-def test_limit_inside_subquery_rejected(scope):
+def test_limit_inside_uncorrelated_subquery_executes(scope):
+    # the kept Limit(Sort(...)) subtree runs directly: dept 'a' sorts first
+    out = sql.execute(
+        "SELECT id FROM emp e WHERE dept IN "
+        "(SELECT name FROM dept d ORDER BY name LIMIT 1)",
+        scope,
+    )
+    assert list(out.column("id")) == [0, 2, 5]
+    # scalar subquery idiom: ORDER BY ... LIMIT 1 == MAX
+    top = sql.execute(
+        "SELECT id FROM emp e WHERE sal >= "
+        "(SELECT sal FROM emp e2 ORDER BY sal DESC LIMIT 1)",
+        scope,
+    )
+    assert list(top.column("id")) == [5]
+
+
+def test_limit_inside_correlated_subquery_rejected(scope):
     with pytest.raises(SqlError) as ei:
         sql.execute(
-            "SELECT id FROM emp e WHERE dept IN "
-            "(SELECT name FROM dept d ORDER BY name LIMIT 1)",
+            "SELECT id FROM emp e WHERE sal > "
+            "(SELECT budget FROM dept d WHERE d.name = e.dept "
+            "ORDER BY budget LIMIT 1)",
             scope,
         )
-    assert "LIMIT inside IN subqueries" in str(ei.value)
+    assert "LIMIT inside correlated" in str(ei.value)
+
+
+def test_limit_under_sort_ties_is_deterministic(scope):
+    """Stable tiebreak sort: equal keys keep input order, so LIMIT picks
+    the same rows as the (stable, row-at-a-time) oracle backend."""
+    from repro.sql.oracle_backend import execute_oracle
+
+    tables = {
+        "t": {
+            "k": np.array([2, 1, 2, 1, 1, 2]),
+            "v": np.arange(6),
+        }
+    }
+    scope2 = {"t": TensorFrame.from_arrays(tables["t"])}
+    q = "SELECT k, v FROM t ORDER BY k LIMIT 4"
+    got = sql.execute(q, scope2)
+    naive = sql.plan_query(q, scope2, optimized=False)
+    ora = execute_oracle(naive, tables)
+    assert list(got.column("k")) == list(ora["k"])
+    assert list(got.column("v")) == list(ora["v"])
+    # ascending ties keep original positions; DESC negation preserves it
+    got_d = sql.execute("SELECT k, v FROM t ORDER BY k DESC LIMIT 3", scope2)
+    assert list(got_d.column("v")) == [0, 2, 5]
 
 
 def test_distinct_inside_scalar_subquery_rejected(scope):
