@@ -1,0 +1,156 @@
+"""repro.store: zone-map scan pushdown, interned dictionary merges,
+and .tfb v1-vs-v2 load time.
+
+Three lanes (ISSUE 4 acceptance):
+
+- **selectivity sweep** — TPC-H lineitem-shaped data, date-clustered
+  (the layout real fact tables have), scanned at ~10% / ~1% / ~0.1%
+  date selectivity with the predicate pushed into the store vs. a full
+  materialize.  The acceptance bar is >=5x at <=1% selectivity;
+  ``derived`` reports the measured speedup and the chunk skip ratio.
+- **dictionary merges** — ``merge_dictionaries`` on two equal
+  dictionaries: cold (distinct objects: concatenate + re-sort) vs
+  interned (same pooled object: identity remap).
+- **load time** — the same table written as flat ``.tfb`` v1 and
+  chunked v2: full column loads for both, the lazy v2 open (manifest
+  only), and a v2 predicate load that only touches surviving chunks.
+
+Scan calls are microsecond-scale, so each lane times a tight loop and
+reports per-call cost (single-call timing is dominated by allocator
+noise at this size).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from .common import report, tpch_tables
+
+
+def _per_call(fn, loops: int) -> float:
+    """Seconds per call over a warm tight loop."""
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(loops):
+        fn()
+    return (time.perf_counter() - t0) / loops
+
+
+def _lineitem_sorted(sf: float):
+    """lineitem columns, clustered by l_shipdate (zone-map-friendly)."""
+    li = tpch_tables(sf)["lineitem"]
+    order = np.argsort(li["l_shipdate"], kind="stable")
+    return {k: v[order] for k, v in li.items()}
+
+
+def _date_cut(dates: np.ndarray, selectivity: float) -> np.datetime64:
+    """A >= cut-off hitting ~``selectivity`` of the (sorted) rows."""
+    i = int(round((1.0 - selectivity) * (dates.shape[0] - 1)))
+    return dates[i]
+
+
+def run(sf: float = 0.01, quick: bool = False):
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro import store
+    from repro.core import TensorFrame, col, io as tio
+
+    li = _lineitem_sorted(sf)
+    chunk_rows = 1 << 11 if quick else 1 << 13
+    table = store.Table.from_arrays(li, chunk_rows=chunk_rows)
+    n = li["l_orderkey"].shape[0]
+    proj = ["l_orderkey", "l_extendedprice", "l_discount", "l_quantity"]
+    loops = 100 if quick else 200
+
+    t_full = _per_call(lambda: store.scan(table, proj), loops)
+    report(
+        "store/scan/full", t_full,
+        f"n={n};chunks={table.n_chunks};chunk_rows={chunk_rows}",
+    )
+    for label, sel in (("10pct", 0.10), ("1pct", 0.01), ("01pct", 0.001)):
+        cut = _date_cut(li["l_shipdate"], sel)
+        preds = [store.Pred("l_shipdate", ">=", cut)]
+        r = store.scan(table, proj, preds)
+        t_push = _per_call(lambda: store.scan(table, proj, preds), loops)
+        report(
+            f"store/scan/sel_{label}",
+            t_push,
+            f"speedup={t_full / t_push:.1f}x;"
+            f"skipped={r.chunks_skipped}/{r.chunks_total};rows={r.nrows}",
+        )
+
+    # frame-level: pushdown vs materialize-everything-then-filter
+    cut = _date_cut(li["l_shipdate"], 0.01)
+    preds = [store.Pred("l_shipdate", ">=", cut)]
+    t_frame_push = _per_call(
+        lambda: TensorFrame.from_store(table, proj, preds), 10
+    )
+    cutd = int(cut.astype("datetime64[D]").astype(np.int64))
+    t_frame_full = _per_call(
+        lambda: TensorFrame.from_store(table, proj + ["l_shipdate"]).filter(
+            col("l_shipdate") >= cutd
+        ),
+        10,
+    )
+    report(
+        "store/frame/pushdown_1pct",
+        t_frame_push,
+        f"vs_full_scan={t_frame_full / t_frame_push:.1f}x",
+    )
+
+    # ---- interned vs cold dictionary merges -------------------------
+    from repro.core import encoding
+
+    words = np.array(
+        sorted({f"word{i:06d}" for i in range(20_000 if not quick else 5_000)}),
+        dtype=object,
+    )
+    cold_a, cold_b = words.copy(), words.copy()
+    interned_a = store.intern_dictionary(words)
+    interned_b = store.intern_dictionary(words.copy())
+    assert interned_a is interned_b
+    t_cold = _per_call(
+        lambda: encoding.merge_dictionaries(cold_a, cold_b), 10
+    )
+    t_interned = _per_call(
+        lambda: encoding.merge_dictionaries(interned_a, interned_b), loops
+    )
+    report("store/dict_merge/cold", t_cold, f"k={words.shape[0]}")
+    report(
+        "store/dict_merge/interned",
+        t_interned,
+        f"speedup={t_cold / max(t_interned, 1e-9):.1f}x",
+    )
+
+    # ---- .tfb v1 vs v2 load -----------------------------------------
+    d = tempfile.mkdtemp(prefix="tfb_store_bench_")
+    try:
+        p1, p2 = os.path.join(d, "li_v1"), os.path.join(d, "li_v2")
+        tio.write_tfb(p1, li, version=1)
+        tio.write_tfb(p2, li, version=2, chunk_rows=chunk_rows)
+        t_v1 = _per_call(lambda: tio.read_tfb_arrays(p1, proj), 5)
+        t_v2 = _per_call(lambda: tio.read_tfb_arrays(p2, proj), 5)
+        report("store/load/v1_full", t_v1, f"n={n}")
+        report("store/load/v2_full", t_v2, f"vs_v1={t_v1 / t_v2:.1f}x")
+        t_open = _per_call(lambda: store.open_store(p2), 5)
+        report("store/load/v2_open_lazy", t_open, "manifest+stats only")
+        t_v2_pred = _per_call(
+            lambda: store.scan(store.open_store(p2), proj, preds), 5
+        )
+        report(
+            "store/load/v2_pushdown_1pct",
+            t_v2_pred,
+            f"vs_v1_full={t_v1 / t_v2_pred:.1f}x;"
+            f"vs_v2_full={t_v2 / t_v2_pred:.1f}x",
+        )
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -51,6 +51,7 @@ def main() -> None:
         bench_roofline,
         bench_scaling,
         bench_sql,
+        bench_store,
         bench_tpch,
         bench_tpcds,
     )
@@ -58,6 +59,7 @@ def main() -> None:
     suites = {
         "tpch": lambda: bench_tpch.run(sf=sf, quick=quick),
         "dist": lambda: bench_dist.run(quick=quick),
+        "store": lambda: bench_store.run(sf=sf, quick=quick),
         "tpcds": lambda: bench_tpcds.run(sf=sf, quick=quick),
         "sql": lambda: bench_sql.run(sf=sf, quick=quick),
         "operators": lambda: bench_operators.run(sf=sf, quick=quick),

@@ -33,7 +33,15 @@ def merge_dictionaries(
     factorize-then-join (Alg. 3 line 5).  Returns
     (merged_dictionary, remap_a, remap_b) where ``remap_x[old_code]``
     gives the code in the merged (sorted) dictionary.
+
+    Columns whose dictionaries were interned through the store's
+    process-wide pool (``repro.store.pool``) arrive as the *same
+    object*: that degenerates to an identity remap — no concatenate,
+    no re-sort (the paper's "dictionary operations" hot spot).
     """
+    if da is db:
+        identity = np.arange(da.shape[0], dtype=np.int64)
+        return da, identity, identity
     merged = np.unique(np.concatenate([da, db]))
     remap_a = np.searchsorted(merged, da).astype(np.int64)
     remap_b = np.searchsorted(merged, db).astype(np.int64)

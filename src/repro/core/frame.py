@@ -119,6 +119,47 @@ def _empty_tensor(n: int, dtype) -> jax.Array:
     return jnp.zeros((n, 0), dtype=dtype)
 
 
+def _assemble_frame(
+    int_cols: List[Tuple[str, np.ndarray, str, Optional[np.ndarray]]],
+    float_cols: List[Tuple[str, np.ndarray]],
+    offloaded: Dict[str, "OffloadedColumn"],
+    order: List[str],
+    n: int,
+) -> "TensorFrame":
+    """Stack encoded host columns into the two device tensors."""
+    columns: Dict[str, ColumnMeta] = {}
+    islots: Dict[str, int] = {}
+    fslots: Dict[str, int] = {}
+    for i, (name, _, _, _) in enumerate(int_cols):
+        islots[name] = i
+    for i, (name, _) in enumerate(float_cols):
+        fslots[name] = i
+    itensor = (
+        jnp.asarray(np.column_stack([c[1] for c in int_cols]).astype(np.int64))
+        if int_cols
+        else _empty_tensor(n, INT)
+    )
+    ftensor = (
+        jnp.asarray(
+            np.column_stack([c[1] for c in float_cols]).astype(
+                np.dtype(CONFIG.float_dtype)
+            )
+        )
+        if float_cols
+        else _empty_tensor(n, float_dtype())
+    )
+    imeta = {name: (kind, dic) for name, _, kind, dic in int_cols}
+    for name in order:
+        if name in islots:
+            kind, dic = imeta[name]
+            columns[name] = ColumnMeta(name, kind, islots[name], dic)
+        elif name in fslots:
+            columns[name] = ColumnMeta(name, "float", fslots[name])
+        else:
+            columns[name] = ColumnMeta(name, "obj", -1)
+    return TensorFrame(itensor, ftensor, columns, offloaded, n)
+
+
 class TensorFrame:
     def __init__(
         self,
@@ -186,38 +227,68 @@ class TensorFrame:
             else:
                 raise TypeError(f"column {name}: unsupported dtype {arr.dtype}")
         n = 0 if n is None else n
+        return _assemble_frame(int_cols, float_cols, offloaded, order, n)
 
-        columns: Dict[str, ColumnMeta] = {}
-        islots: Dict[str, int] = {}
-        fslots: Dict[str, int] = {}
-        for i, (name, _, _, _) in enumerate(int_cols):
-            islots[name] = i
-        for i, (name, _) in enumerate(float_cols):
-            fslots[name] = i
-        itensor = (
-            jnp.asarray(np.column_stack([c[1] for c in int_cols]).astype(np.int64))
-            if int_cols
-            else _empty_tensor(n, INT)
+    @staticmethod
+    def from_store(
+        table,
+        columns: Optional[Sequence[str]] = None,
+        predicates: Sequence = (),
+        *,
+        card_threshold: Optional[float] = None,
+        encode: Optional[Dict[str, str]] = None,
+    ) -> "TensorFrame":
+        """Materialize a frame from a ``repro.store`` chunked table.
+
+        ``predicates`` are sargable store conjuncts
+        (``repro.store.Pred``): zone maps skip whole chunks and the
+        survivors are row-filtered host-side, so only matching rows
+        ever reach the device tensors (scan pushdown).  Dictionary
+        columns keep the store's *interned* dictionary — no
+        re-factorization, and frames built from the same store share
+        dictionary objects, making join-time dictionary merges
+        identity operations.
+        """
+        from repro import store as _store
+
+        result = _store.scan(table, columns, list(predicates))
+        threshold = (
+            CONFIG.card_threshold if card_threshold is None else card_threshold
         )
-        ftensor = (
-            jnp.asarray(
-                np.column_stack([c[1] for c in float_cols]).astype(
-                    np.dtype(CONFIG.float_dtype)
-                )
-            )
-            if float_cols
-            else _empty_tensor(n, float_dtype())
-        )
-        imeta = {name: (kind, dic) for name, _, kind, dic in int_cols}
-        for name in order:
-            if name in islots:
-                kind, dic = imeta[name]
-                columns[name] = ColumnMeta(name, kind, islots[name], dic)
-            elif name in fslots:
-                columns[name] = ColumnMeta(name, "float", fslots[name])
-            else:
-                columns[name] = ColumnMeta(name, "obj", -1)
-        return TensorFrame(itensor, ftensor, columns, offloaded, n)
+        encode = encode or {}
+        n = result.nrows
+        int_cols: List[Tuple[str, np.ndarray, str, Optional[np.ndarray]]] = []
+        float_cols: List[Tuple[str, np.ndarray]] = []
+        offloaded: Dict[str, OffloadedColumn] = {}
+        order: List[str] = []
+        for name, mc in result.columns.items():
+            order.append(name)
+            forced = encode.get(name)
+            if mc.dictionary is not None:
+                if forced == "obj":
+                    safe = np.clip(
+                        mc.values, 0, max(0, mc.dictionary.shape[0] - 1)
+                    )
+                    offloaded[name] = OffloadedColumn(mc.dictionary[safe])
+                else:
+                    int_cols.append((name, mc.values, "dict", mc.dictionary))
+            elif mc.ctype == "float":
+                float_cols.append((name, mc.values))
+            elif mc.ctype == "str":
+                # plain (high-cardinality) strings: same policy as
+                # from_arrays — dict-encode below the threshold, offload
+                # above it
+                if forced == "obj":
+                    offloaded[name] = OffloadedColumn(mc.values)
+                    continue
+                codes, dictionary = encoding.factorize(mc.values)
+                if forced == "dict" or dictionary.shape[0] <= threshold * max(1, n):
+                    int_cols.append((name, codes, "dict", dictionary))
+                else:
+                    offloaded[name] = OffloadedColumn(mc.values)
+            else:  # int / date / bool days already in physical form
+                int_cols.append((name, mc.values, mc.ctype, None))
+        return _assemble_frame(int_cols, float_cols, offloaded, order, n)
 
     # ------------------------------------------------------------------
     # basic introspection

@@ -134,3 +134,22 @@ def as_frames(tables: Tables, **kwargs):
     from repro.core import TensorFrame
 
     return {name: TensorFrame.from_arrays(cols, **kwargs) for name, cols in tables.items()}
+
+
+def as_store(tables: Tables, *, chunk_rows: int = 1 << 16, sort_fact_by_date: bool = False):
+    """Tables as chunked ``repro.store`` tables.
+
+    ``sort_fact_by_date`` clusters ``store_sales`` by its sold-date key
+    before chunking so date-keyed zone maps become selective (the
+    layout a date-partitioned warehouse load produces).
+    """
+    from repro import store as storelib
+
+    out = {}
+    for name, cols in tables.items():
+        cols = dict(cols)
+        if sort_fact_by_date and name == "store_sales":
+            order = np.argsort(cols["ss_sold_date_sk"], kind="stable")
+            cols = {c: v[order] for c, v in cols.items()}
+        out[name] = storelib.Table.from_arrays(cols, chunk_rows=chunk_rows)
+    return out

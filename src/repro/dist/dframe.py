@@ -66,6 +66,19 @@ def dist_enabled(nrows: int) -> bool:
     return jax.device_count() > 1 and nrows >= CONFIG.dist_min_rows
 
 
+def _from_chunks(arr, dtype) -> jax.Array:
+    """Accept a chunk sequence (repro.store column chunks, or any list
+    of host arrays) as one device array — a chunk is the store's
+    natural shard unit, so chunked columns feed the all-to-all without
+    a host-side copy round-trip through a monolithic array."""
+    if isinstance(arr, (list, tuple)):
+        parts = [jnp.asarray(np.asarray(c), dtype=dtype) for c in arr]
+        if not parts:
+            return jnp.zeros((0,), dtype=dtype)
+        return jnp.concatenate(parts)
+    return jnp.asarray(arr)
+
+
 def _pad_to(mesh, axis: str, keys: jax.Array, vals: jax.Array | None):
     """Pad to a multiple of the mesh size with null keys / zero values."""
     ndev = mesh.shape[axis]
@@ -185,8 +198,15 @@ def dist_repartition_by_key(
     Returns ``(keys2, vals2, valid, dropped)``: global slot arrays of
     length ``ndev * ndev * ceil(capacity / ndev)``, a boolean mask of
     the occupied slots, and the replicated global overflow count.
+
+    ``keys``/``vals`` may each be a *sequence of chunks* (e.g. the
+    per-chunk physical arrays of a ``repro.store`` column) instead of
+    one array — the chunk grid is the store's natural shard unit, and
+    the row order is the chunks' concatenation order.
     """
     ndev = mesh.shape[axis]
+    keys = _from_chunks(keys, jnp.int64)
+    vals = _from_chunks(vals, None)
     # ceil: a source shard holds ceil(n/ndev) rows, so capacity >= n
     # really does guarantee every row fits its bucket (lossless)
     bucket = max(1, -(-capacity // ndev))

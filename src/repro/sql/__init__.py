@@ -24,7 +24,7 @@ from .parser import SqlError, parse
 from .plan import build_plan, format_plan
 from .optimize import decorrelate as _decorrelate
 from .optimize import optimize as _optimize
-from .lower import lower_plan, scope_frames
+from .lower import lower_plan, scope_frames, store_table_names
 
 __all__ = [
     "SqlError",
@@ -38,34 +38,43 @@ __all__ = [
 def plan_query(query: str, scope: Dict, *, optimized: bool = True):
     """Parse + plan (+ optionally optimize) ``query`` against ``scope``.
 
-    ``scope`` maps table name -> TensorFrame (or dict of numpy arrays);
-    only column names are consulted here, so either works.
+    ``scope`` maps table name -> TensorFrame, ``repro.store.Table``, or
+    dict of numpy arrays; only column names are consulted here, so any
+    of them works.  Store-backed tables additionally enable the
+    optimizer's scan-pushdown rule (sargable conjuncts move into the
+    Scan and are answered with zone maps).
     """
     frames = scope_frames(scope)
     catalog = {name: list(f.column_names) for name, f in frames.items()}
     plan = build_plan(parse(query), catalog)
-    return _optimize(plan) if optimized else plan
+    if optimized:
+        return _optimize(plan, store_tables=store_table_names(frames))
+    return plan
 
 
 def execute(query: str, scope: Dict, *, optimize: bool = True):
-    """Run a SQL ``SELECT`` over a scope of TensorFrames.
+    """Run a SQL ``SELECT`` over a scope of TensorFrames/store tables.
 
     Returns a TensorFrame (aggregate-only queries yield one row).
-    ``optimize=False`` skips constant folding, filter pushdown and
-    projection pruning, but still decorrelates subqueries — the
-    TensorFrame backend has no interpreted-subquery path (only the
-    oracle backend interprets markers, row at a time).
+    ``optimize=False`` skips constant folding, filter pushdown,
+    scan pushdown and projection pruning, but still decorrelates
+    subqueries — the TensorFrame backend has no interpreted-subquery
+    path (only the oracle backend interprets markers, row at a time).
     """
     frames = scope_frames(scope)
     plan = plan_query(query, frames, optimized=False)
-    plan = _optimize(plan) if optimize else _decorrelate(plan)
+    if optimize:
+        plan = _optimize(plan, store_tables=store_table_names(frames))
+    else:
+        plan = _decorrelate(plan)
     return lower_plan(plan, frames)
 
 
 def explain(query: str, scope: Dict) -> str:
     """Pre- and post-optimization logical plans, as printable text."""
-    naive = plan_query(query, scope, optimized=False)
-    opt = _optimize(naive)
+    frames = scope_frames(scope)
+    naive = plan_query(query, frames, optimized=False)
+    opt = _optimize(naive, store_tables=store_table_names(frames))
     return (
         "== logical plan ==\n"
         + format_plan(naive)

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import TensorFrame, col, if_else, lit
 from repro.core.expr import DateLit, Expr
+from repro.store import Pred as StorePred, Table as StoreTable
 
 from .parser import (
     SqlError,
@@ -54,20 +55,34 @@ from .plan import (
 )
 
 
-def scope_frames(scope: Dict) -> Dict[str, TensorFrame]:
-    """Accept TensorFrames or raw dict-of-numpy tables in the scope."""
+def scope_frames(scope: Dict) -> Dict:
+    """Accept TensorFrames, store tables, or raw dict-of-numpy tables.
+
+    ``repro.store.Table`` entries stay chunked: their Scans lower
+    through ``TensorFrame.from_store`` with any pushed predicates, so
+    zone-map chunk skipping happens before tensors materialize.
+    """
     out = {}
     for name, obj in scope.items():
-        if isinstance(obj, TensorFrame):
+        if isinstance(obj, (TensorFrame, StoreTable)):
             out[name] = obj
         elif isinstance(obj, dict):
             out[name] = TensorFrame.from_arrays(obj)
         else:
             raise SqlError(
-                f"scope entry {name!r} must be a TensorFrame or a dict of "
-                f"numpy arrays, not {type(obj).__name__}"
+                f"scope entry {name!r} must be a TensorFrame, a "
+                f"repro.store.Table, or a dict of numpy arrays, not "
+                f"{type(obj).__name__}"
             )
     return out
+
+
+def store_table_names(scope: Dict) -> frozenset:
+    """Scope entries backed by chunked store tables (scan pushdown
+    targets for the optimizer)."""
+    return frozenset(
+        name for name, obj in scope.items() if isinstance(obj, StoreTable)
+    )
 
 
 # ----------------------------------------------------------------------
@@ -168,6 +183,33 @@ def to_expr(e) -> Expr:
     raise SqlError(f"cannot lower expression {format_expr(e)}")
 
 
+_FLIP_CMP = {"<": ">", "<=": ">=", ">": "<", ">=": "<=", "=": "=", "<>": "<>"}
+
+
+def _scan_pred(c, alias: str) -> StorePred:
+    """One sargable SQL conjunct -> a store predicate.
+
+    Store predicates use the table's unqualified column names and plain
+    python constants (dates as int days)."""
+    strip = alias + "."
+
+    def name(e: SCol) -> str:
+        return e.internal[len(strip):] if e.internal.startswith(strip) else e.internal
+
+    def const(e):
+        return int(e.days) if isinstance(e, SDate) else e.value
+
+    if isinstance(c, SCmp):
+        if isinstance(c.a, SCol):
+            return StorePred(name(c.a), c.op, const(c.b))
+        return StorePred(name(c.b), _FLIP_CMP[c.op], const(c.a))
+    if isinstance(c, SBetween):
+        return StorePred(name(c.e), "between", (const(c.lo), const(c.hi)))
+    if isinstance(c, SIn):
+        return StorePred(name(c.e), "in", tuple(const(v) for v in c.values))
+    raise SqlError(f"cannot push predicate {format_expr(c)} into a scan")
+
+
 def _lower_substring(e: SFunc) -> Expr:
     if len(e.args) != 3:
         raise SqlError("SUBSTRING takes (string, start, length)")
@@ -184,14 +226,26 @@ def _lower_substring(e: SFunc) -> Expr:
 def lower_plan(node, frames: Dict[str, TensorFrame]) -> TensorFrame:
     if isinstance(node, Scan):
         try:
-            f = frames[node.table]
+            src = frames[node.table]
         except KeyError:
             raise SqlError(
                 f"table {node.table!r} missing from scope; have "
                 f"{sorted(frames)}"
             ) from None
-        f = f.select(list(node.columns))
-        return f.rename({c: f"{node.alias}.{c}" for c in node.columns})
+        if isinstance(src, StoreTable):
+            preds = [_scan_pred(c, node.alias) for c in node.predicates]
+            f = TensorFrame.from_store(src, list(node.columns), preds)
+            return f.rename({c: f"{node.alias}.{c}" for c in node.columns})
+        f = src.select(list(node.columns))
+        f = f.rename({c: f"{node.alias}.{c}" for c in node.columns})
+        if node.predicates:
+            # defensive: predicates only land on store-backed scans,
+            # but an in-memory frame can still apply them as a filter
+            pred = node.predicates[0]
+            for c in node.predicates[1:]:
+                pred = SAnd(pred, c)
+            f = f.filter(to_expr(pred))
+        return f
     if isinstance(node, Filter):
         return lower_plan(node.child, frames).filter(to_expr(node.pred))
     if isinstance(node, Join):

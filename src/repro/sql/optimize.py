@@ -37,11 +37,13 @@ from .parser import (
     Boxed,
     SqlError,
     SAnd,
+    SBetween,
     SBin,
     SCase,
     SCmp,
     SCol,
     SDate,
+    SIn,
     SInterval,
     SIsNull,
     SLit,
@@ -73,11 +75,21 @@ from .plan import (
 )
 
 
-def optimize(plan):
-    """decorrelate -> fold constants -> push filters -> prune."""
+def optimize(plan, store_tables=frozenset()):
+    """decorrelate -> fold constants -> push filters (incl. through
+    Projects) -> push sargable conjuncts into store scans -> prune.
+
+    ``store_tables`` names the scope tables backed by ``repro.store``
+    chunked tables: only their Scans accept pushed predicates (zone-map
+    chunk skipping happens in the scan, so the conjunct leaves the plan
+    entirely).  In-memory scans keep explicit Filters so plans over
+    plain frames are unchanged.
+    """
     plan = decorrelate(plan)
     plan = fold_constants(plan)
     plan = push_filters(plan)
+    if store_tables:
+        plan = push_scan_predicates(plan, frozenset(store_tables))
     plan = prune_projections(plan)
     return plan
 
@@ -699,6 +711,26 @@ def _push_into(child, conjuncts):
     if isinstance(child, Distinct):
         # a filter over the deduped columns commutes with dedup
         return Distinct(_push_into(child.child, conjuncts))
+    if isinstance(child, Project):
+        # A conjunct over Project outputs rewrites to the defining
+        # expressions and commutes with the projection — this is what
+        # lets predicates keep sinking through derived tables (q15's
+        # revenue filter used to stop at the qualifying Project and
+        # re-scan the whole derived output).
+        outmap = {n: e for n, e in child.outputs}
+        below, stay = [], []
+        for c in conjuncts:
+            if subquery_markers(c) or not expr_columns(c) <= set(outmap):
+                stay.append(c)
+            else:
+                below.append(_substitute_outputs(c, outmap))
+        inner = (
+            _push_into(child.child, below)
+            if below
+            else push_filters(child.child)
+        )
+        out = Project(inner, child.outputs)
+        return Filter(out, conjoin(stay)) if stay else out
     if isinstance(child, AttachScalar):
         below, stay = [], []
         for c in conjuncts:
@@ -716,6 +748,87 @@ def _push_into(child, conjuncts):
     return Filter(child, conjoin(conjuncts))
 
 
+def _substitute_outputs(e, outmap):
+    """Rewrite output-column references to their defining expressions."""
+    return transform(
+        e,
+        lambda n: outmap[n.internal]
+        if isinstance(n, SCol) and n.internal in outmap
+        else n,
+    )
+
+
+# ----------------------------------------------------------------------
+# rule 2b: sargable conjuncts into store-backed scans
+# ----------------------------------------------------------------------
+def push_scan_predicates(node, store_tables):
+    """Move sargable Filter conjuncts into Scans of store-backed tables.
+
+    A sargable conjunct compares one scanned column against constants
+    (``col <op> literal``, ``BETWEEN``, ``IN (literals, ...)``).  The
+    store scan applies it exactly — zone maps skip whole chunks, then a
+    host-side row filter — so the conjunct is *removed* from the plan
+    rather than duplicated.  Everything else (LIKE, arithmetic over
+    columns, OR trees) stays as a residual Filter above the scan.
+    """
+    if isinstance(node, Filter):
+        child = push_scan_predicates(node.child, store_tables)
+        if isinstance(child, Scan) and child.table in store_tables:
+            push, keep = [], []
+            for c in split_conjuncts(node.pred):
+                (push if _sargable(c, child) else keep).append(c)
+            if push:
+                child = dataclasses.replace(
+                    child, predicates=child.predicates + tuple(push)
+                )
+            return Filter(child, conjoin(keep)) if keep else child
+        return Filter(child, node.pred)
+    if isinstance(node, Join):
+        return dataclasses.replace(
+            node,
+            left=push_scan_predicates(node.left, store_tables),
+            right=push_scan_predicates(node.right, store_tables),
+        )
+    if isinstance(node, (Project, Aggregate, Sort, Limit, Distinct)):
+        return dataclasses.replace(
+            node, child=push_scan_predicates(node.child, store_tables)
+        )
+    if isinstance(node, AttachScalar):
+        return dataclasses.replace(
+            node,
+            child=push_scan_predicates(node.child, store_tables),
+            sub=Boxed(push_scan_predicates(node.sub.v, store_tables)),
+        )
+    return node
+
+
+def _is_scan_const(e) -> bool:
+    if isinstance(e, SDate):
+        return True
+    return (
+        isinstance(e, SLit)
+        and e.value is not None
+        and not isinstance(e.value, bool)
+    )
+
+
+def _sargable(c, scan: Scan) -> bool:
+    cols = {f"{scan.alias}.{col}" for col in scan.columns}
+
+    def scan_col(e) -> bool:
+        return isinstance(e, SCol) and e.internal in cols
+
+    if isinstance(c, SCmp):
+        return (scan_col(c.a) and _is_scan_const(c.b)) or (
+            scan_col(c.b) and _is_scan_const(c.a)
+        )
+    if isinstance(c, SBetween) and not c.negated:
+        return scan_col(c.e) and _is_scan_const(c.lo) and _is_scan_const(c.hi)
+    if isinstance(c, SIn) and not c.negated:
+        return scan_col(c.e) and all(_is_scan_const(v) for v in c.values)
+    return False
+
+
 # ----------------------------------------------------------------------
 # rule 3: projection pruning
 # ----------------------------------------------------------------------
@@ -725,11 +838,29 @@ def prune_projections(node, required: Optional[Set[str]] = None):
     ``required=None`` means "everything" (the root, and below nodes that
     need their child intact)."""
     if isinstance(node, Project):
+        outputs = node.outputs
+        if required is not None:
+            # Narrow the projection to what parents actually consume —
+            # the decorrelated semi/anti-join right sides (IN-subquery
+            # Projects, derived tables under joins) shrink to their
+            # join keys before the build (ROADMAP open item).
+            kept = tuple((n, e) for n, e in outputs if n in required)
+            if kept:
+                outputs = kept
         need = set()
-        for _, e in node.outputs:
+        for _, e in outputs:
             need |= expr_columns(e)
-        return Project(prune_projections(node.child, need), node.outputs)
-    if isinstance(node, (Sort, Limit)):
+        return Project(prune_projections(node.child, need), outputs)
+    if isinstance(node, Sort):
+        # sort keys are consumed here even if no parent needs them
+        need = (
+            None if required is None
+            else required | {n for n, _ in node.keys}
+        )
+        return dataclasses.replace(
+            node, child=prune_projections(node.child, need)
+        )
+    if isinstance(node, Limit):
         return dataclasses.replace(
             node, child=prune_projections(node.child, required)
         )

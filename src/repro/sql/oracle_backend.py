@@ -44,6 +44,8 @@ from .parser import (
     SLit,
     SNot,
     SOr,
+    conjoin,
+    expr_columns,
     format_expr,
 )
 from .plan import (
@@ -271,6 +273,26 @@ def _exec(plan, ctx: _Ctx) -> orc.ODF:
         raw = ctx.tables[plan.table]
         df = orc.from_numpy({c: raw[c] for c in plan.columns})
         out = {f"{plan.alias}.{c}": v for c, v in df.items()}
+        if plan.predicates:
+            # predicates pushed into a (store-backed) scan left the
+            # plan's Filters; interpreting them here keeps the oracle
+            # usable on store-optimized plans too.  Pruning may have
+            # narrowed the scan's output past the predicate columns, so
+            # evaluate against a widened row view.
+            need = {
+                c.split(".", 1)[1]
+                for p in plan.predicates
+                for c in expr_columns(p)
+            } - set(plan.columns)
+            full = dict(out)
+            if need:
+                extra = orc.from_numpy({c: raw[c] for c in need})
+                full.update(
+                    {f"{plan.alias}.{c}": v for c, v in extra.items()}
+                )
+            pred = conjoin(list(plan.predicates))
+            mask = [_truthy(eval_row(pred, r, ctx)) for r in _rows(full)]
+            out = orc.o_filter(out, mask)
         ctx.scans[id(plan)] = out
         return out
     if isinstance(plan, Filter):

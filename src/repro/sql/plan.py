@@ -56,6 +56,11 @@ class Scan:
     table: str
     alias: str
     columns: Tuple[str, ...]  # unqualified physical columns to load
+    # Sargable conjuncts pushed INTO the scan (store-backed tables:
+    # zone-map chunk skipping + host-side row filter before any tensor
+    # materializes).  Internal (qualified) column references; applied
+    # exactly, so they are not re-checked above the scan.
+    predicates: Tuple[object, ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -774,7 +779,12 @@ def format_plan(node, indent: int = 0) -> str:
     if isinstance(node, Scan):
         cols = ", ".join(node.columns)
         tag = node.table if node.alias == node.table else f"{node.table} {node.alias}"
-        return f"{pad}Scan {tag} [{cols}]"
+        pushed = ""
+        if node.predicates:
+            pushed = " pushed=" + " AND ".join(
+                format_expr(p) for p in node.predicates
+            )
+        return f"{pad}Scan {tag} [{cols}]{pushed}"
     if isinstance(node, Filter):
         out = (
             f"{pad}Filter {format_expr(node.pred)}\n"

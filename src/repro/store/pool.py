@@ -1,0 +1,90 @@
+"""Process-wide interned string-pool for column dictionaries.
+
+Every dictionary that enters the store is canonicalized through one
+process-wide pool: two columns (in the same table, across chunks, or in
+different tables/frames) whose dictionaries have equal content share
+the *same* ``np.ndarray`` object.  Downstream, identity is the fast
+path — ``core.encoding.merge_dictionaries`` returns an O(1)/O(k)
+identity remap when both sides are the same object, and the join's
+shared-factorization step (``core.join.shared_key_codes``) skips the
+dictionary merge entirely (``ld is rd``).  This is the paper's own
+"dictionary operations" optimization opportunity: re-sorting and
+re-merging identical dictionaries per frame was pure waste.
+
+The pool is content-addressed (byte digest of the entries), guarded by
+a full equality check so a digest collision can never alias two
+different dictionaries.  Interned arrays are marked read-only; sharing
+is only safe because nobody may write through them.
+
+The pool holds strong references for the process lifetime — identity
+(`is`) comparisons stay valid for as long as any code might hold a
+code array encoded against an interned dictionary.  Long-running
+processes that churn through many distinct dictionaries should call
+``POOL.clear()`` at table-set boundaries (a bounded / weak-referenced
+pool is a ROADMAP follow-up).
+
+No jax imports here: the pool (like all of ``repro.store``) is host-side
+numpy and must stay importable without initializing any accelerator.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def _digest(dictionary: np.ndarray) -> Tuple[int, bytes]:
+    h = hashlib.sha1()
+    for s in dictionary:
+        b = str(s).encode("utf-8")
+        h.update(len(b).to_bytes(4, "little"))
+        h.update(b)
+    return int(dictionary.shape[0]), h.digest()
+
+
+class StringPool:
+    """Content-addressed intern table for sorted dictionary arrays."""
+
+    def __init__(self) -> None:
+        self._by_key: Dict[Tuple[int, bytes], List[np.ndarray]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def intern(self, dictionary: np.ndarray) -> np.ndarray:
+        """Return the canonical instance of ``dictionary``.
+
+        Equal-content calls return the *same object* (``is``-identical),
+        so identity checks downstream replace content comparisons.  The
+        canonical array is read-only.
+        """
+        dictionary = np.asarray(dictionary)
+        key = _digest(dictionary)
+        bucket = self._by_key.setdefault(key, [])
+        for cand in bucket:  # digest-collision guard: verify content
+            if cand.shape == dictionary.shape and bool(
+                np.all(cand == dictionary)
+            ):
+                self.hits += 1
+                return cand
+        canonical = dictionary.copy()
+        canonical.setflags(write=False)
+        bucket.append(canonical)
+        self.misses += 1
+        return canonical
+
+    def __len__(self) -> int:
+        return sum(len(b) for b in self._by_key.values())
+
+    def clear(self) -> None:
+        self._by_key.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+#: The process-wide pool every store table interns through.
+POOL = StringPool()
+
+
+def intern_dictionary(dictionary: np.ndarray) -> np.ndarray:
+    return POOL.intern(dictionary)

@@ -10,7 +10,10 @@ deployment processes.
 import jax
 import pytest
 
-_X64_PREFIXES = ("test_core", "test_tpch", "test_tpcds", "test_sql", "test_dist")
+_X64_PREFIXES = (
+    "test_core", "test_tpch", "test_tpcds", "test_sql", "test_dist",
+    "test_store", "test_io",
+)
 
 
 def pytest_configure(config):

@@ -1,0 +1,107 @@
+"""core.io CSV loader: explicit dtype hints beat sniffing, null tokens
+parse as nulls, and all-null columns round-trip (ISSUE 4 satellite —
+extends the tests/test_core_encoding.py null cases through the io
+path)."""
+import numpy as np
+import pytest
+
+from repro.core import TensorFrame
+from repro.core import io as tio
+
+
+def _write(tmp_path, text):
+    p = str(tmp_path / "t.csv")
+    with open(p, "w") as f:
+        f.write(text)
+    return p
+
+
+# ----------------------------------------------------------------------
+# hints are authoritative
+# ----------------------------------------------------------------------
+def test_str_hint_beats_numeric_sniffing(tmp_path):
+    p = _write(tmp_path, "code\n001\n002\n010\n")
+    out = tio.read_csv_arrays(p, sep=",", dtypes={"code": "str"})
+    assert list(out["code"]) == ["001", "002", "010"]  # not 1, 2, 10
+
+
+def test_float_hint_beats_int_sniffing(tmp_path):
+    p = _write(tmp_path, "x\n1\n2\n3\n")
+    out = tio.read_csv_arrays(p, sep=",", dtypes={"x": "float"})
+    assert out["x"].dtype == np.float64
+    np.testing.assert_array_equal(out["x"], [1.0, 2.0, 3.0])
+    # without the hint the same column sniffs to int64
+    assert tio.read_csv_arrays(p, sep=",")["x"].dtype == np.int64
+
+
+def test_unknown_hint_raises_instead_of_sniffing(tmp_path):
+    p = _write(tmp_path, "x\n1\n")
+    with pytest.raises(ValueError) as ei:
+        tio.read_csv_arrays(p, sep=",", dtypes={"x": "int32"})
+    assert "int32" in str(ei.value)
+
+
+def test_int_hint_rejects_malformed_cells(tmp_path):
+    p = _write(tmp_path, "x\n1\n2.5\n")
+    with pytest.raises(ValueError):
+        tio.read_csv_arrays(p, sep=",", dtypes={"x": "int"})
+
+
+# ----------------------------------------------------------------------
+# nulls
+# ----------------------------------------------------------------------
+def test_null_tokens_promote_int_to_float_nan(tmp_path):
+    p = _write(tmp_path, "a|b\n1||\n2|3\n".replace("||", "|"))
+    p = _write(tmp_path, "a|b\n1|\n2|3\n")
+    out = tio.read_csv_arrays(p)
+    assert out["a"].dtype == np.int64
+    assert out["b"].dtype == np.float64
+    assert np.isnan(out["b"][0]) and out["b"][1] == 3.0
+    # same with an explicit int hint: nulls still force the promotion
+    out = tio.read_csv_arrays(p, dtypes={"b": "int"})
+    assert out["b"].dtype == np.float64 and np.isnan(out["b"][0])
+
+
+def test_date_nulls_parse_as_nat(tmp_path):
+    p = _write(tmp_path, "d\n1994-01-01\nNone\n1995-06-01\n")
+    out = tio.read_csv_arrays(p, sep=",", dtypes={"d": "date"})
+    assert np.isnat(out["d"][1])
+    assert out["d"][0] == np.datetime64("1994-01-01")
+
+
+def test_all_null_column_round_trips_through_io(tmp_path):
+    """The test_core_encoding left-join case, through write_csv ->
+    read_csv: an all-null measure survives as NaN floats and keeps
+    aggregating as COUNT=0 / SUM=0."""
+    left = TensorFrame.from_arrays(
+        {"k": np.array(["a", "b", "c"], dtype=object),
+         "v": np.array([1.0, 2.0, 3.0])}
+    )
+    right = TensorFrame.from_arrays(
+        {"k": np.array(["x", "y"], dtype=object), "w": np.array([10.0, 20.0])}
+    )
+    joined = left.join(right, on="k", how="left")
+    p = str(tmp_path / "j.csv")
+    tio.write_csv(p, {n: joined.column(n) for n in ("k", "v", "w")})
+    back = tio.read_csv(p)
+    w = back.column("w")
+    assert w.dtype == np.float64 and np.isnan(w.astype(float)).all()
+    agg = back.groupby("k").agg([("n", "count", "w"), ("s", "sum", "w")])
+    assert list(agg.column("n")) == [0, 0, 0]
+    assert list(agg.column("s")) == [0.0, 0.0, 0.0]
+
+
+def test_all_null_without_hint_is_nan_floats(tmp_path):
+    p = _write(tmp_path, "x\nNone\nNone\n")
+    out = tio.read_csv_arrays(p, sep=",")
+    assert out["x"].dtype == np.float64 and np.isnan(out["x"]).all()
+
+
+def test_string_columns_keep_null_tokens_verbatim(tmp_path):
+    # a words column that happens to contain 'None' must not be nulled
+    p = _write(tmp_path, "s\nNone\nhello\n")
+    out = tio.read_csv_arrays(p, sep=",", dtypes={"s": "str"})
+    assert list(out["s"]) == ["None", "hello"]
+    # sniffed path: mixed non-parsing column stays verbatim strings too
+    out = tio.read_csv_arrays(p, sep=",")
+    assert list(out["s"]) == ["None", "hello"]

@@ -886,3 +886,89 @@ def test_not_in_with_null_producing_subquery_uses_join_semantics(scope):
     # list is [a, b, NULL].  Join semantics keep c (three-valued SQL
     # would return no rows at all).
     assert _threeway(q, scope) == {"name": ["c"]}
+
+
+# ----------------------------------------------------------------------
+# optimizer: filter pushdown through (derived-table) Projects
+# ----------------------------------------------------------------------
+def test_filter_pushes_through_derived_table_project(scope):
+    plan = sql.plan_query(
+        "SELECT name FROM (SELECT name, budget FROM dept) d "
+        "WHERE d.budget > 150",
+        scope,
+    )
+    filters = [n for _, n in _tree(plan) if isinstance(n, Filter)]
+    assert len(filters) == 1
+    # the predicate re-wrote to the defining expression and sank to the
+    # scan instead of re-scanning the whole derived output
+    assert isinstance(filters[0].child, Scan)
+    assert "budget" in format_plan(filters[0]).splitlines()[0]
+
+
+def test_filter_on_computed_derived_output_pushes_and_rewrites(scope):
+    plan = sql.plan_query(
+        "SELECT twice FROM (SELECT budget * 2 AS twice, loc FROM dept) d "
+        "WHERE d.twice > 300",
+        scope,
+    )
+    filters = [n for _, n in _tree(plan) if isinstance(n, Filter)]
+    assert len(filters) == 1 and isinstance(filters[0].child, Scan)
+    # output reference replaced by its defining expression
+    assert "budget * 2" in format_plan(filters[0]).replace("(", "").replace(")", "")
+    got = sql.execute(
+        "SELECT twice FROM (SELECT budget * 2 AS twice, loc FROM dept) d "
+        "WHERE d.twice > 300 ORDER BY twice",
+        scope,
+    )
+    assert list(got.column("twice")) == [400.0, 600.0]
+
+
+def test_filter_on_aggregate_derived_output_stops_at_aggregate(scope):
+    # q15's shape: the derived output is an aggregate result — the
+    # filter passes the qualifying Projects but must stay above the
+    # Aggregate node
+    plan = sql.plan_query(
+        "SELECT loc2 FROM (SELECT loc AS loc2, SUM(budget) AS tot "
+        "FROM dept GROUP BY loc) d WHERE d.tot > 250",
+        scope,
+    )
+    filters = [n for _, n in _tree(plan) if isinstance(n, Filter)]
+    assert len(filters) == 1
+    assert isinstance(filters[0].child, Aggregate)
+
+
+# ----------------------------------------------------------------------
+# optimizer: projection narrowing (semi-join/derived build inputs)
+# ----------------------------------------------------------------------
+def test_derived_join_input_project_narrowed_to_required(scope):
+    plan = sql.plan_query(
+        "SELECT e.id FROM emp e, (SELECT name, loc, budget FROM dept) d "
+        "WHERE e.dept = d.name",
+        scope,
+    )
+    projects = [n for _, n in _tree(plan) if isinstance(n, Project)]
+    derived = [
+        p for p in projects
+        if any(name.startswith("d.") for name, _ in p.outputs)
+    ]
+    assert derived, format_plan(plan)
+    # only the join key survives; loc/budget are gone before the build
+    assert all(
+        [name for name, _ in p.outputs] == ["d.name"] for p in derived
+    ), format_plan(plan)
+    scans = {n.table: n for _, n in _tree(plan) if isinstance(n, Scan)}
+    assert scans["dept"].columns == ("name",)
+
+
+def test_decorrelated_in_subquery_right_side_narrowed(scope):
+    plan = sql.plan_query(
+        "SELECT id FROM emp WHERE dept IN "
+        "(SELECT name FROM dept WHERE budget > 150)",
+        scope,
+    )
+    joins = [n for _, n in _tree(plan) if isinstance(n, Join)]
+    assert len(joins) == 1 and joins[0].how == "semi"
+    scans = {n.table: n for _, n in _tree(plan) if isinstance(n, Scan)}
+    # the semi-join build side loads only its key + filter columns
+    assert scans["dept"].columns == ("name", "budget")
+    assert scans["emp"].columns == ("id", "dept")

@@ -1,0 +1,389 @@
+"""repro.store: chunked columnar tables, zone maps, interned
+dictionaries, the .tfb v2 format, and the dist chunk-input path.
+
+The property tests (hypothesis) check the subsystem's core contract:
+a chunked, encoded, zone-map-pruned scan returns exactly what a
+whole-array numpy filter returns, for random data, chunk sizes, and
+predicates.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import store
+from repro.core import TensorFrame, encoding
+from repro.core import io as tio
+
+
+# ----------------------------------------------------------------------
+# import hygiene: the storage layer must never pull in jax
+# ----------------------------------------------------------------------
+def test_store_imports_without_jax():
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    code = (
+        "import repro.store, sys; "
+        "assert 'jax' not in sys.modules, sorted(m for m in sys.modules if m.startswith('jax'))"
+    )
+    env = dict(os.environ, PYTHONPATH=os.path.abspath(src))
+    subprocess.run([sys.executable, "-c", code], check=True, env=env)
+
+
+# ----------------------------------------------------------------------
+# encoding policy + stats
+# ----------------------------------------------------------------------
+def test_policy_picks_dict_rle_plain():
+    n = 4000
+    rng = np.random.default_rng(0)
+    t = store.Table.from_arrays(
+        {
+            "low_card": np.array(["a", "b", "c"], dtype=object)[
+                rng.integers(0, 3, n)
+            ],
+            "high_card": np.array([f"id{i}" for i in range(n)], dtype=object),
+            "clustered": np.sort(rng.integers(0, 40, n)),
+            "scattered": rng.integers(0, 1 << 40, n),
+            "measure": rng.uniform(0, 1, n),
+        },
+        chunk_rows=512,
+    )
+    assert t.columns["low_card"].encoding == "dict"
+    assert t.columns["high_card"].encoding == "plain"
+    assert t.columns["clustered"].encoding == "rle"
+    assert t.columns["scattered"].encoding == "plain"
+    assert t.columns["measure"].encoding == "plain"
+    assert t.n_chunks == (n + 511) // 512
+
+
+def test_forced_encoding_overrides_policy():
+    arr = {"s": np.array([f"u{i}" for i in range(100)], dtype=object)}
+    t = store.Table.from_arrays(arr, encode={"s": "dict"})
+    assert t.columns["s"].encoding == "dict"
+    with pytest.raises(ValueError):
+        store.Table.from_arrays({"x": np.arange(5.0)}, encode={"x": "rle"})
+
+
+def test_chunk_stats_zone_maps_and_nulls():
+    vals = np.array([3.0, np.nan, 7.0, np.nan, 5.0])
+    s = store.compute_stats(vals, "float")
+    assert s.vmin == 3.0 and s.vmax == 7.0
+    assert s.null_count == 2 and s.distinct == 3
+    all_null = store.compute_stats(np.array([np.nan, np.nan]), "float")
+    assert all_null.vmin is None and all_null.null_count == 2
+    # all-null chunks are skippable under every predicate except <>,
+    # where NaN cells match (IEEE, like the engine's filter lowering)
+    assert not store.chunk_may_match(all_null, ("=", 1.0))
+    assert not store.chunk_may_match(all_null, ("<", 1.0))
+    assert store.chunk_may_match(all_null, ("<>", 1.0))
+
+
+def test_dict_zone_maps_are_code_ranges():
+    t = store.Table.from_arrays(
+        {"s": np.array(list("aabbccdd"), dtype=object)}, chunk_rows=4
+    )
+    col = t.columns["s"]
+    assert col.encoding == "dict"
+    # sorted dictionary => chunk 0 holds codes {0,1}, chunk 1 {2,3}
+    assert (col.chunks[0].stats.vmin, col.chunks[0].stats.vmax) == (0, 1)
+    assert (col.chunks[1].stats.vmin, col.chunks[1].stats.vmax) == (2, 3)
+    r = store.scan(t, ["s"], [store.Pred("s", "=", "a")])
+    assert r.chunks_skipped == 1 and r.nrows == 2
+
+
+# ----------------------------------------------------------------------
+# zone-map effectiveness on clustered data (the bench acceptance,
+# asserted on deterministic skip counts rather than wall time)
+# ----------------------------------------------------------------------
+def test_clustered_scan_skips_chunks_at_low_selectivity():
+    rng = np.random.default_rng(7)
+    n = 40_000
+    dates = np.sort(
+        np.datetime64("1994-01-01", "D")
+        + rng.integers(0, 2000, n).astype("timedelta64[D]")
+    )
+    t = store.Table.from_arrays(
+        {"d": dates, "v": rng.uniform(0, 1, n)}, chunk_rows=1024
+    )
+    cut = dates[int(0.99 * (n - 1))]  # ~1% selectivity
+    r = store.scan(t, ["v"], [store.Pred("d", ">=", cut)])
+    assert r.nrows == int((dates >= cut).sum())
+    assert r.chunks_skipped >= 0.9 * r.chunks_total
+    assert r.rows_scanned <= 0.1 * n
+
+
+# ----------------------------------------------------------------------
+# interned dictionaries
+# ----------------------------------------------------------------------
+def test_intern_returns_same_object_for_equal_content():
+    a = store.intern_dictionary(np.array(["a", "b"], dtype=object))
+    b = store.intern_dictionary(np.array(["a", "b"], dtype=object))
+    c = store.intern_dictionary(np.array(["a", "c"], dtype=object))
+    assert a is b and a is not c
+    with pytest.raises(ValueError):
+        a[0] = "z"  # interned arrays are read-only
+
+
+def test_merge_dictionaries_identity_fast_path():
+    d = store.intern_dictionary(np.array(["a", "b", "c"], dtype=object))
+    merged, ra, rb = encoding.merge_dictionaries(d, d)
+    assert merged is d
+    np.testing.assert_array_equal(ra, [0, 1, 2])
+    np.testing.assert_array_equal(rb, [0, 1, 2])
+
+
+def test_frames_from_same_store_share_dictionaries():
+    data = {"k": np.array(list("xyzxyz"), dtype=object), "v": np.arange(6.0)}
+    t = store.Table.from_arrays(data, chunk_rows=2)
+    fa = TensorFrame.from_store(t, ["k", "v"])
+    fb = TensorFrame.from_store(t, ["k"])
+    assert fa.meta("k").dictionary is fb.meta("k").dictionary
+    out = fa.join(fb, on="k", how="semi")
+    assert out.nrows == 6
+
+
+# ----------------------------------------------------------------------
+# TensorFrame.from_store
+# ----------------------------------------------------------------------
+def test_from_store_matches_from_arrays():
+    rng = np.random.default_rng(3)
+    n = 700
+    data = {
+        "i": rng.integers(-5, 5, n),
+        "f": rng.uniform(-1, 1, n),
+        "b": rng.integers(0, 2, n).astype(bool),
+        "d": np.datetime64("1996-01-01", "D")
+        + rng.integers(0, 90, n).astype("timedelta64[D]"),
+        "s": np.array(["lo", "mid", "hi"], dtype=object)[rng.integers(0, 3, n)],
+        "hc": np.array([f"row{i}" for i in range(n)], dtype=object),
+    }
+    t = store.Table.from_arrays(data, chunk_rows=97)
+    got = TensorFrame.from_store(t)
+    ref = TensorFrame.from_arrays(data)
+    assert got.column_names == ref.column_names
+    for name in ref.column_names:
+        a, b = got.column(name), ref.column(name)
+        assert got.meta(name).kind == ref.meta(name).kind
+        if a.dtype.kind == "f":
+            np.testing.assert_allclose(a, b)
+        else:
+            np.testing.assert_array_equal(a, b)
+
+
+def test_from_store_pushdown_equals_filter():
+    rng = np.random.default_rng(4)
+    n = 1500
+    data = {"k": rng.integers(0, 100, n), "v": rng.uniform(0, 1, n)}
+    t = store.Table.from_arrays(data, chunk_rows=128)
+    got = TensorFrame.from_store(t, ["v"], [store.Pred("k", "<", 10)])
+    ref = data["v"][data["k"] < 10]
+    np.testing.assert_allclose(np.sort(got.column("v")), np.sort(ref))
+    empty = TensorFrame.from_store(t, ["v"], [store.Pred("k", "=", 10_000)])
+    assert empty.nrows == 0 and empty.column("v").shape == (0,)
+
+
+# ----------------------------------------------------------------------
+# .tfb v2 round trips + v1 compat
+# ----------------------------------------------------------------------
+def _mixed_table(n=300, seed=5):
+    rng = np.random.default_rng(seed)
+    return {
+        "i": rng.integers(0, 1000, n),
+        "f": np.round(rng.uniform(-10, 10, n), 3),
+        "d": np.datetime64("1993-05-01", "D")
+        + np.sort(rng.integers(0, 400, n)).astype("timedelta64[D]"),
+        "s": np.array(["AA", "BB", "CC"], dtype=object)[rng.integers(0, 3, n)],
+        "hc": np.array([f"key-{i:05d}" for i in range(n)], dtype=object),
+    }
+
+
+def test_v2_round_trip_lazy(tmp_path):
+    data = _mixed_table()
+    path = str(tmp_path / "t")
+    written = store.write_arrays(path, data, chunk_rows=64)
+    assert written.nrows == 300
+    t = store.open_store(path)
+    assert not any(
+        c.loaded for col in t.columns.values() for c in col.chunks
+    )
+    out = t.to_arrays()
+    for name, want in data.items():
+        if want.dtype == object:
+            assert list(out[name]) == list(want)
+        else:
+            np.testing.assert_array_equal(out[name], want)
+    # persisted stats survive the round trip (zone maps in manifest)
+    fresh = store.Table.from_arrays(data, chunk_rows=64)
+    for name in data:
+        got = [ (c.stats.vmin, c.stats.vmax, c.stats.null_count, c.stats.distinct)
+                for c in t.columns[name].chunks ]
+        want_stats = [ (c.stats.vmin, c.stats.vmax, c.stats.null_count, c.stats.distinct)
+                for c in fresh.columns[name].chunks ]
+        assert got == want_stats, name
+
+
+def test_v1_and_v2_read_compat_through_io(tmp_path):
+    """Both format versions read back identically through core.io."""
+    data = _mixed_table()
+    p1, p2 = str(tmp_path / "v1"), str(tmp_path / "v2")
+    tio.write_tfb(p1, data, version=1)
+    tio.write_tfb(p2, data, version=2, chunk_rows=50)
+    a1 = tio.read_tfb_arrays(p1)
+    a2 = tio.read_tfb_arrays(p2)
+    assert set(a1) == set(a2) == set(data)
+    for name in data:
+        if data[name].dtype == object:
+            assert list(a1[name]) == list(a2[name])
+        else:
+            np.testing.assert_array_equal(a1[name], a2[name])
+    # frame-level: v2 read supports predicate pushdown, v1 rejects it
+    cut = np.datetime64("1994-01-01", "D")
+    f2 = tio.read_tfb(p2, ["f", "d"], [store.Pred("d", "<", cut)])
+    assert f2.nrows == int((data["d"] < cut).sum())
+    with pytest.raises(ValueError):
+        tio.read_tfb(p1, ["f"], [store.Pred("d", "<", cut)])
+
+
+def test_v2_projection_only_touches_requested_columns(tmp_path):
+    data = _mixed_table()
+    path = str(tmp_path / "t")
+    store.write_arrays(path, data, chunk_rows=64)
+    t = store.open_store(path)
+    t.to_arrays(["i"])
+    assert all(c.loaded for c in t.columns["i"].chunks)
+    assert not any(c.loaded for c in t.columns["f"].chunks)
+    assert t.columns["s"]._dictionary is None  # dictionary stays lazy
+
+
+# ----------------------------------------------------------------------
+# chunked inputs are the dist shard unit
+# ----------------------------------------------------------------------
+def test_dist_repartition_accepts_chunked_inputs():
+    jax = pytest.importorskip("jax")
+    jax.config.update("jax_enable_x64", True)
+    from repro.dist import dframe
+
+    rng = np.random.default_rng(6)
+    n = 600
+    keys = rng.integers(0, 37, n)
+    vals = rng.normal(size=n)
+    t = store.Table.from_arrays({"k": keys, "v": vals}, chunk_rows=100)
+    mesh = dframe.data_mesh(1)
+    key_chunks = [t.columns["k"].chunk_physical(i) for i in range(t.n_chunks)]
+    val_chunks = [t.columns["v"].chunk_physical(i) for i in range(t.n_chunks)]
+    k2, v2, valid, dropped = dframe.dist_repartition_by_key(
+        mesh, key_chunks, val_chunks, capacity=n
+    )
+    km, vm, validm, droppedm = dframe.dist_repartition_by_key(
+        mesh, np.concatenate(key_chunks), np.concatenate(val_chunks), capacity=n
+    )
+    assert int(dropped) == int(droppedm) == 0
+    np.testing.assert_array_equal(np.asarray(k2), np.asarray(km))
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(vm))
+    np.testing.assert_array_equal(np.asarray(valid), np.asarray(validm))
+
+
+# ----------------------------------------------------------------------
+# regression: predicate constants outside the column's domain
+# ----------------------------------------------------------------------
+def test_float_constants_against_int_columns_not_truncated():
+    """`k < 2.5` means `k <= 2`, never `k < int(2.5) == 2`."""
+    arr = np.arange(10)
+    t = store.Table.from_arrays({"k": arr}, chunk_rows=3)
+
+    def got(op, v):
+        return list(store.scan(t, ["k"], [store.Pred("k", op, v)]).columns["k"].values)
+
+    assert got("<", 2.5) == [0, 1, 2]
+    assert got("<=", 2.5) == [0, 1, 2]
+    assert got(">", 2.5) == [3, 4, 5, 6, 7, 8, 9]
+    assert got(">=", 2.5) == [3, 4, 5, 6, 7, 8, 9]
+    assert got("=", 2.5) == []
+    assert got("<>", 2.5) == list(arr)
+    assert got("between", (1.5, 3.5)) == [2, 3]
+    assert got("in", (2.5, 3)) == [3]
+
+
+def test_none_object_cells_stringify_like_v1(tmp_path):
+    """write_tfb v2 must accept None object cells (the engine's null
+    for offloaded columns) exactly like the v1 writer: stringified."""
+    data = {"s": np.array(["a", None, "b"], dtype=object)}
+    p1, p2 = str(tmp_path / "v1"), str(tmp_path / "v2")
+    tio.write_tfb(p1, data, version=1)
+    tio.write_tfb(p2, data, version=2)
+    assert list(tio.read_tfb_arrays(p1)["s"]) == ["a", "None", "b"]
+    assert list(tio.read_tfb_arrays(p2)["s"]) == ["a", "None", "b"]
+
+
+def test_oracle_backend_applies_pushed_scan_predicates():
+    """A store-optimized plan interpreted on the oracle must not drop
+    the conjuncts that moved into the Scan."""
+    from repro import sql
+    from repro.sql.oracle_backend import execute_oracle
+    from repro.sql.plan import format_plan
+
+    data = {"k": np.arange(20), "v": np.arange(20) * 1.0}
+    t = store.Table.from_arrays(data, chunk_rows=4)
+    plan = sql.plan_query("SELECT v FROM t WHERE k >= 15", {"t": t})
+    assert "pushed=" in format_plan(plan)  # the Filter left the plan
+    ora = execute_oracle(plan, {"t": data})
+    assert sorted(ora["v"]) == [15.0, 16.0, 17.0, 18.0, 19.0]
+
+
+def test_unpruned_scan_uses_bulk_load(tmp_path):
+    """A predicate that skips nothing must still bulk-load columns
+    sequentially (one read per file), not per-chunk."""
+    data = {"k": np.arange(1000), "v": np.arange(1000) * 0.5}
+    path = str(tmp_path / "t")
+    store.write_arrays(path, data, chunk_rows=64)
+    t = store.open_store(path)
+    r = store.scan(t, ["v"], [store.Pred("k", ">=", 0)])  # keeps all
+    assert r.chunks_skipped == 0 and r.nrows == 1000
+    assert all(c.loaded for c in t.columns["v"].chunks)
+    np.testing.assert_allclose(r.columns["v"].values, data["v"])
+
+
+def test_huge_int_constants_stay_exact():
+    """Constants >= 2**53 must not round-trip through float64."""
+    base = 1 << 53
+    arr = np.array([base, base + 1, base + 2], dtype=np.int64)
+    t = store.Table.from_arrays({"k": arr}, chunk_rows=2)
+    r = store.scan(t, ["k"], [store.Pred("k", "=", base + 1)])
+    assert list(r.columns["k"].values) == [base + 1]
+    r = store.scan(t, ["k"], [store.Pred("k", "in", (base + 2,))])
+    assert list(r.columns["k"].values) == [base + 2]
+    r = store.scan(t, ["k"], [store.Pred("k", "between", (base + 1, base + 1))])
+    assert list(r.columns["k"].values) == [base + 1]
+
+
+def test_pushed_neq_matches_engine_semantics_on_nan():
+    """`<>` over NaN floats: optimize=True (pushed into the scan) and
+    optimize=False (explicit engine Filter) must agree row for row."""
+    from repro import sql
+
+    scope = {
+        "t": store.Table.from_arrays(
+            {"id": np.arange(4), "f": np.array([1.0, 2.0, np.nan, 3.0])},
+            chunk_rows=2,
+        )
+    }
+    q = "SELECT id FROM t WHERE f <> 1.0 ORDER BY id"
+    a = list(sql.execute(q, scope).column("id"))
+    b = list(sql.execute(q, scope, optimize=False).column("id"))
+    assert a == b == [1, 2, 3]
+
+
+def test_neq_keeps_chunks_with_nulls_among_uniform_values():
+    """A chunk whose non-null values all equal v still has NaN rows
+    that match `<>` — pruning must not skip it."""
+    arr = np.array([5.0, 5.0, np.nan, 5.0, 1.0, 2.0])
+    t = store.Table.from_arrays({"x": arr}, chunk_rows=4)
+    got = store.scan(t, ["x"], [store.Pred("x", "<>", 5.0)]).columns["x"].values
+    with np.errstate(invalid="ignore"):
+        ref = arr[arr != 5.0]
+    np.testing.assert_array_equal(got, ref)
+    # and the uniform no-null chunk is still skippable
+    t2 = store.Table.from_arrays({"x": np.array([5.0] * 4 + [1.0] * 4)}, chunk_rows=4)
+    r = store.scan(t2, ["x"], [store.Pred("x", "<>", 5.0)])
+    assert r.chunks_skipped == 1 and list(r.columns["x"].values) == [1.0] * 4

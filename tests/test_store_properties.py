@@ -1,0 +1,158 @@
+"""Property tests for repro.store (ISSUE 4 satellite).
+
+The subsystem's core contract, fuzzed: a chunked, encoded,
+zone-map-pruned scan returns exactly what a whole-array numpy filter
+returns — for random data, random chunk sizes (including chunk_rows=1
+and chunks larger than the data), random predicates, and both clustered
+(sorted) and scattered layouts.
+
+Requires the optional ``hypothesis`` dev dependency (see
+requirements-dev.txt); skipped when absent, like
+tests/test_core_properties.py.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro import store
+
+_OPS = ("=", "<>", "<", "<=", ">", ">=")
+
+
+@settings(
+    max_examples=60,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    data=st.lists(st.integers(-50, 50), min_size=0, max_size=300),
+    chunk_rows=st.integers(1, 64),
+    op=st.sampled_from(_OPS + ("between", "in")),
+    v=st.integers(-55, 55),
+    w=st.integers(-55, 55),
+    sort=st.booleans(),
+)
+def test_scan_equals_whole_frame_scan_ints(data, chunk_rows, op, v, w, sort):
+    arr = np.array(sorted(data) if sort else data, dtype=np.int64)
+    t = store.Table.from_arrays(
+        {"x": arr, "row": np.arange(arr.shape[0])}, chunk_rows=chunk_rows
+    )
+    if op == "between":
+        lo, hi = min(v, w), max(v, w)
+        pred, ref = store.Pred("x", "between", (lo, hi)), (arr >= lo) & (arr <= hi)
+    elif op == "in":
+        pred, ref = store.Pred("x", "in", (v, w)), np.isin(arr, [v, w])
+    else:
+        pred = store.Pred("x", op, v)
+        ref = {
+            "=": arr == v, "<>": arr != v, "<": arr < v,
+            "<=": arr <= v, ">": arr > v, ">=": arr >= v,
+        }[op]
+    r = store.scan(t, ["x", "row"], [pred])
+    assert r.nrows == int(ref.sum())
+    np.testing.assert_array_equal(r.columns["x"].values, arr[ref])
+    np.testing.assert_array_equal(
+        r.columns["row"].values, np.arange(arr.shape[0])[ref]
+    )
+    # pruning may only drop whole chunks, never matching rows
+    assert r.rows_scanned >= r.nrows
+
+
+@settings(
+    max_examples=40,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    codes=st.lists(st.integers(0, 5), min_size=1, max_size=200),
+    chunk_rows=st.integers(1, 32),
+    op=st.sampled_from(_OPS),
+    pick=st.integers(0, 6),
+)
+def test_scan_equals_whole_frame_scan_strings(codes, chunk_rows, op, pick):
+    vocab = np.array(
+        ["apple", "kiwi", "lime", "mango", "pear", "plum"], dtype=object
+    )
+    arr = vocab[np.array(codes)]
+    needle = (list(vocab) + ["zzz"])[pick]  # present or absent values
+    t = store.Table.from_arrays({"s": arr}, chunk_rows=chunk_rows)
+    got = t.columns["s"].decode(
+        store.scan(t, ["s"], [store.Pred("s", op, needle)]).columns["s"].values
+    )
+    ref = {
+        "=": arr == needle, "<>": arr != needle, "<": arr < needle,
+        "<=": arr <= needle, ">": arr > needle, ">=": arr >= needle,
+    }[op]
+    np.testing.assert_array_equal(got, arr[ref])
+
+
+@settings(
+    max_examples=30,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    data=st.lists(
+        st.floats(-100, 100, allow_nan=False) | st.just(float("nan")),
+        min_size=0,
+        max_size=200,
+    ),
+    chunk_rows=st.integers(1, 48),
+    op=st.sampled_from(_OPS),
+    v=st.floats(-110, 110, allow_nan=False),
+)
+def test_scan_equals_whole_frame_scan_floats_with_nulls(data, chunk_rows, op, v):
+    """NaN cells follow the engine's IEEE comparison semantics exactly
+    (no match for any op except <>), so pushed predicates select the
+    same rows the equivalent frame filter would — regardless of how
+    NaNs fall across chunks (all-null chunks included)."""
+    arr = np.array(data, dtype=np.float64)
+    t = store.Table.from_arrays({"x": arr}, chunk_rows=chunk_rows)
+    with np.errstate(invalid="ignore"):
+        ref = {
+            "=": arr == v, "<>": arr != v, "<": arr < v,
+            "<=": arr <= v, ">": arr > v, ">=": arr >= v,
+        }[op]
+    r = store.scan(t, ["x"], [store.Pred("x", op, v)])
+    np.testing.assert_array_equal(r.columns["x"].values, arr[ref])
+
+
+@settings(
+    max_examples=30,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+@given(
+    n=st.integers(0, 200),
+    chunk_rows=st.integers(1, 64),
+    v1_first=st.booleans(),
+)
+def test_tfb_v1_v2_round_trip_compat(tmp_path_factory, n, chunk_rows, v1_first):
+    """Any table written as v1 and as v2 reads back identically through
+    the one core.io entry point (version sniffed from the manifest)."""
+    from repro.core import io as tio
+
+    rng = np.random.default_rng(n)
+    data = {
+        "i": rng.integers(-1000, 1000, n),
+        "f": rng.uniform(-1, 1, n),
+        "s": np.array(["a", "bb", "ccc"], dtype=object)[rng.integers(0, 3, n)],
+    }
+    base = tmp_path_factory.mktemp("tfb")
+    order = [(1, "v1"), (2, "v2")]
+    if not v1_first:
+        order.reverse()
+    out = {}
+    for version, tag in order:
+        p = str(base / tag)
+        tio.write_tfb(p, data, version=version, chunk_rows=chunk_rows)
+        out[tag] = tio.read_tfb_arrays(p)
+    for name in data:
+        if data[name].dtype == object:
+            assert list(out["v1"][name]) == list(out["v2"][name]) == list(data[name])
+        else:
+            np.testing.assert_array_equal(out["v1"][name], data[name])
+            np.testing.assert_array_equal(out["v2"][name], data[name])

@@ -1,0 +1,118 @@
+"""TPC-H SQL over store-backed tables (ISSUE 4 acceptance).
+
+Every TPC-H query runs twice through ``repro.sql``: once over the
+in-memory TensorFrames (the stack the three-way differential tests in
+tests/test_sql.py already pin against the oracle and the hand plans)
+and once over a scope of chunked ``repro.store`` tables — small chunks,
+fact tables date-clustered, dictionaries interned, sargable predicates
+pushed into the scans.  Results must be identical: scan pushdown and
+chunk skipping are pure access-path changes.
+"""
+import numpy as np
+import pytest
+
+from repro import sql, store
+from repro.core import oracle as orc
+from repro.data import tpch
+from repro.queries.tpch_sql import SCALAR_SQL, TPCH_SQL, sql_text
+
+SF = 0.002  # matches the shared tpch_small fixture
+
+# same split as tests/test_sql.py: multi-join compiles in the slow lane
+SLOW_SQL = {
+    "q2", "q3", "q4", "q5", "q7", "q8", "q9", "q10",
+    "q11", "q13", "q17", "q18", "q20", "q21",
+}
+
+QNAMES = sorted(TPCH_SQL, key=lambda s: int(s[1:]))
+
+
+@pytest.fixture(scope="module")
+def scopes(tpch_small):
+    tables, frames = tpch_small
+    stores = tpch.as_store(tables, chunk_rows=512, sort_fact_by_date=True)
+    return frames, stores
+
+
+def _params():
+    return [
+        pytest.param(q, marks=pytest.mark.slow) if q in SLOW_SQL else q
+        for q in QNAMES
+    ]
+
+
+@pytest.mark.parametrize("qname", _params())
+def test_store_backed_sql_matches_frames(scopes, qname):
+    frames, stores = scopes
+    text = sql_text(qname, SF)
+    want = sql.execute(text, frames)
+    got = sql.execute(text, stores)
+    godf, wodf = orc.frame_to_odf(got), orc.frame_to_odf(want)
+    if qname in SCALAR_SQL:
+        (name,) = godf.keys()
+        assert godf[name][0] == pytest.approx(wodf[name][0], rel=1e-8)
+        return
+    assert set(godf) == set(wodf)
+    orc.assert_odf_equal(godf, wodf, sort=True, rtol=1e-8)
+
+
+def test_store_covers_all_22_queries():
+    assert QNAMES == [f"q{i}" for i in range(1, 23)]
+
+
+# ----------------------------------------------------------------------
+# plan-level: the optimizer pushes into store scans, and only there
+# ----------------------------------------------------------------------
+def test_explain_pushes_sargable_predicates_into_store_scan(scopes):
+    frames, stores = scopes
+    text = sql_text("q6", SF)
+    opt = sql.explain(text, stores).split("== optimized plan ==")[1]
+    # q6 is one lineitem scan with date-range + discount-range +
+    # quantity predicates: all sargable, all pushed, no residual Filter
+    assert "pushed=" in opt
+    assert "l_shipdate" in opt.split("pushed=")[1]
+    assert "Filter" not in opt
+    # same query over frames keeps the explicit Filter (no store scans)
+    opt_f = sql.explain(text, frames).split("== optimized plan ==")[1]
+    assert "pushed=" not in opt_f and "Filter" in opt_f
+
+
+def test_explain_keeps_residual_filters_above_store_scan(scopes):
+    _, stores = scopes
+    # LIKE is not sargable: it must stay a residual Filter even though
+    # the date conjunct pushes
+    opt = sql.explain(
+        "SELECT COUNT(*) AS n FROM orders "
+        "WHERE o_orderdate >= DATE '1995-01-01' "
+        "AND o_comment LIKE '%special%requests%'",
+        stores,
+    ).split("== optimized plan ==")[1]
+    assert "pushed=" in opt and "o_orderdate" in opt.split("pushed=")[1]
+    assert "Filter" in opt and "LIKE" in opt
+
+
+def test_store_scan_skips_chunks_on_clustered_dates(scopes):
+    """The access-path win the SQL layer rides on: a date predicate on
+    the date-clustered lineitem store skips most chunks."""
+    _, stores = scopes
+    li = stores["lineitem"]
+    r = store.scan(
+        li,
+        ["l_extendedprice"],
+        [store.Pred("l_shipdate", ">=", np.datetime64("1998-06-01"))],
+    )
+    assert r.chunks_skipped >= 0.8 * r.chunks_total
+    full = store.scan(li, ["l_extendedprice"])
+    assert r.nrows < full.nrows
+
+
+def test_store_scope_unoptimized_still_correct(scopes):
+    """optimize=False lowers store scans without pushdown — full
+    materialization plus explicit Filters must agree with pushdown."""
+    frames, stores = scopes
+    text = sql_text("q6", SF)
+    a = sql.execute(text, stores)
+    b = sql.execute(text, stores, optimize=False)
+    orc.assert_odf_equal(
+        orc.frame_to_odf(a), orc.frame_to_odf(b), sort=True, rtol=1e-12
+    )
