@@ -1,0 +1,155 @@
+"""Late-materialization join chains + stats-driven algorithm pick
+(ISSUE 5 acceptance lanes).
+
+Three lanes over a q5/q9-shaped star schema (one wide fact table,
+three unique-key dimensions backed by store tables so zone-map stats
+flow into the frames):
+
+- **chain3 pipeline** — fact ⋈ orders ⋈ supplier ⋈ part then a
+  grouped sum, run with late materialization ON (RowView selection
+  vectors compose; payloads gather once at the group-by) vs OFF (the
+  seed engine: every join copies every payload column).  The ISSUE 5
+  acceptance bar is >=2x; ``derived`` reports the measured speedup.
+- **chain3 join-only** — the same 3-join chain without the aggregate,
+  materialized once at the end: the wall-time proxy for the removed
+  per-join host syncs + payload copies.
+- **auto pick** — fact ⋈ orders with ``algorithm="auto"`` answered by
+  the stats cache (zone maps prove the build side unique: direct
+  address, no build sort) vs forced ``"sorted"`` (what every join paid
+  before stats threading).  ``derived`` includes the decision counters.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import measure, report
+
+
+def _star(n_fact: int, seed: int = 0):
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro import store
+    from repro.core import TensorFrame
+
+    rng = np.random.default_rng(seed)
+    sizes = {
+        "okey": n_fact // 8,  # orders
+        "skey": n_fact // 60,  # supplier
+        "pkey": n_fact // 30,  # part
+        "ckey": n_fact // 10,  # customer
+    }
+    # lineitem-shaped width: 4 FKs + 10 measures + 4 int attributes
+    fact = {
+        **{k: rng.integers(0, nd, n_fact) for k, nd in sizes.items()},
+        "price": rng.random(n_fact) * 1e4,
+        "disc": rng.random(n_fact) * 0.1,
+        "tax": rng.random(n_fact) * 0.08,
+        **{f"m{i}": rng.random(n_fact) for i in range(7)},
+        "qty": rng.integers(1, 50, n_fact),
+        "flag": rng.integers(0, 3, n_fact),
+        "ship": rng.integers(8000, 12000, n_fact),
+        "commit": rng.integers(8000, 12000, n_fact),
+    }
+    dims = {}
+    for key, nd in sizes.items():
+        # orders-shaped dimension payloads ride along through the chain
+        data = {
+            key: np.arange(nd),
+            f"attr_{key}": rng.integers(0, 25, nd),
+            **{f"{key}_f{i}": rng.random(nd) for i in range(4)},
+            **{f"{key}_i{i}": rng.integers(0, 99, nd) for i in range(3)},
+        }
+        # store-backed: chunk zone maps prove the key unique, seeding
+        # the frame stats cache consumed by join(algorithm='auto')
+        table = store.Table.from_arrays(data, chunk_rows=max(256, nd // 8))
+        dims[key] = TensorFrame.from_store(table)
+    return TensorFrame.from_arrays(fact), dims
+
+
+def _interleaved(fn, reps: int = 9):
+    """Best-of-reps seconds per mode, measured INTERLEAVED (late,
+    eager, late, eager, ...) so allocator drift and background noise
+    hit both modes equally — a per-mode tight loop does not.  Minimum
+    (not median) because shared-box noise is strictly additive."""
+    import gc
+    import time
+
+    from repro.core.config import CONFIG
+
+    for mode in (True, False):  # warmup both modes (XLA kernel caches)
+        CONFIG.late_materialization = mode
+        fn()
+    samples = {True: [], False: []}
+    try:
+        for _ in range(reps):
+            for mode in (True, False):
+                CONFIG.late_materialization = mode
+                gc.collect()
+                t0 = time.perf_counter()
+                fn()
+                samples[mode].append(time.perf_counter() - t0)
+    finally:
+        CONFIG.late_materialization = True
+    return min(samples[True]), min(samples[False])
+
+
+def run(sf: float = 0.01, quick: bool = False):
+    import importlib
+
+    from repro.core import TensorFrame  # noqa: F401  (x64 flip in _star)
+
+    join_mod = importlib.import_module("repro.core.join")
+
+    # 250k keeps quick mode under ~30s while the eager baseline's wide
+    # intermediates are already past cache (the regime q5/q9 live in)
+    n_fact = 250_000 if quick else 500_000
+    fact, dims = _star(n_fact)
+    chain = list(dims)  # okey, skey, pkey, ckey — a q5-shaped 4-chain
+
+    def chain_pipeline() -> float:
+        out = fact
+        for key in chain:
+            out = out.join(dims[key], on=key)
+        res = out.groupby("attr_skey").agg([("rev", "sum", "price")])
+        return float(np.asarray(res.col_values("rev")).sum())
+
+    def chain_join_only() -> None:
+        out = fact
+        for key in chain:
+            out = out.join(dims[key], on=key)
+        out.materialize().itensor.block_until_ready()
+
+    t_pipe_late, t_pipe_eager = _interleaved(chain_pipeline)
+    t_join_late, t_join_eager = _interleaved(chain_join_only)
+
+    report(
+        "join/chain4/late",
+        t_pipe_late,
+        f"n={n_fact};joins={len(chain)};"
+        f"speedup_vs_eager={t_pipe_eager / t_pipe_late:.1f}x",
+    )
+    report("join/chain4/eager", t_pipe_eager, f"n={n_fact}")
+    report(
+        "join/chain4_joinonly/late",
+        t_join_late,
+        f"speedup_vs_eager={t_join_eager / t_join_late:.1f}x",
+    )
+    report("join/chain4_joinonly/eager", t_join_eager, "")
+
+    # ---- stats-driven auto pick vs forced build sort ----------------
+    orders = dims["okey"]
+    join_mod.reset_stats()
+    t_auto = measure(lambda: fact.join(orders, on="okey").nrows)
+    stats = dict(join_mod.STATS)
+    t_sorted = measure(
+        lambda: fact.join(orders, on="okey", algorithm="sorted").nrows
+    )
+    report(
+        "join/auto_pick/stats_direct",
+        t_auto,
+        f"vs_sorted={t_sorted / t_auto:.1f}x;"
+        f"stats_hits={stats['stats_unique_hits']};"
+        f"sort_tests={stats['uniqueness_sort_tests']}",
+    )
+    report("join/auto_pick/forced_sorted", t_sorted, "")

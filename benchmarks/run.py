@@ -45,6 +45,7 @@ def main() -> None:
         bench_compile,
         bench_cores,
         bench_dist,
+        bench_join,
         bench_loading,
         bench_memory,
         bench_operators,
@@ -59,6 +60,7 @@ def main() -> None:
     suites = {
         "tpch": lambda: bench_tpch.run(sf=sf, quick=quick),
         "dist": lambda: bench_dist.run(quick=quick),
+        "join": lambda: bench_join.run(sf=sf, quick=quick),
         "store": lambda: bench_store.run(sf=sf, quick=quick),
         "tpcds": lambda: bench_tpcds.run(sf=sf, quick=quick),
         "sql": lambda: bench_sql.run(sf=sf, quick=quick),

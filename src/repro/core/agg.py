@@ -35,10 +35,9 @@ def normalize_specs(specs) -> List[AggSpec]:
 
 def _num_values(frame: TensorFrame, name: str) -> jax.Array:
     m = frame.meta(name)
-    if m.kind == "float":
-        return frame.ftensor[:, m.slot]
-    if m.kind in ("int", "bool", "date"):
-        return frame.itensor[:, m.slot]
+    if m.kind in ("float", "int", "bool", "date"):
+        # view-aware: a lazy frame gathers only this column
+        return frame.col_values(name)
     raise TypeError(f"aggregation over non-numeric column {name!r}")
 
 
@@ -88,10 +87,7 @@ def segment_agg(
         rep = jax.ops.segment_min(
             jnp.arange(frame.nrows, dtype=INT), gids, m
         )
-        meta = frame.meta(colname)
-        if meta.kind == "float":
-            return frame.ftensor[rep, meta.slot]
-        return frame.itensor[rep, meta.slot]
+        return frame.col_values(colname)[rep]
     vals = _num_values(frame, colname)
     valid = frame.valid_array(colname)
     if fn == "sum":

@@ -31,6 +31,12 @@ class EngineConfig:
     # input has at least dist_min_rows rows.
     distributed: str = "auto"
     dist_min_rows: int = 1 << 16
+    # Late materialization (ISSUE 5): when True, row-subsetting ops
+    # (take / mask_rows / filter / join / sort) return RowView frames
+    # that compose gather indices instead of copying payload tensors;
+    # payloads materialize once at pipeline exits.  False restores the
+    # eager copy-per-op engine (benchmark baseline / debugging).
+    late_materialization: bool = True
 
 
 CONFIG = EngineConfig()

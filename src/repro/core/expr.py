@@ -177,16 +177,18 @@ class Col(Expr):
     name: str
 
     def eval(self, frame: TensorFrame) -> Value:
+        # view-aware single-column access: a lazy (RowView) frame
+        # gathers just this column, not the whole payload
         m = frame.meta(self.name)
         valid = frame.valid_array(self.name)
         if m.kind == "float":
-            return Value("num", frame.ftensor[:, m.slot], valid=valid)
+            return Value("num", frame.col_values(self.name), valid=valid)
         if m.kind == "dict":
-            return Value("str", frame.itensor[:, m.slot], m.dictionary, valid)
+            return Value("str", frame.col_values(self.name), m.dictionary, valid)
         if m.kind == "obj":
             codes, dictionary = frame.offloaded[self.name].codes()
             return Value("str", codes, dictionary, valid)
-        arr = frame.itensor[:, m.slot]
+        arr = frame.col_values(self.name)
         if m.kind == "date":
             return Value("date", arr, valid=valid)
         if m.kind == "bool":
@@ -445,6 +447,10 @@ class IsNull(Expr):
     def eval(self, frame: TensorFrame) -> Value:
         v = self.a.eval(frame)
         if v.valid is None:
+            # no validity companion: float NaN cells are the nulls (the
+            # store's representation; matches the oracle's math.isnan)
+            if v.kind == "num" and jnp.issubdtype(v.arr.dtype, jnp.floating):
+                return Value("bool", jnp.isnan(v.arr))
             return Value("bool", jnp.zeros((frame.nrows,), dtype=bool))
         return Value("bool", ~v.valid)
 

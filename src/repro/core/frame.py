@@ -14,9 +14,28 @@ Representation (paper §III, Fig. 3), TPU-adapted per DESIGN.md §2:
   name to its physical (tensor, slot) location.  Logical column order is
   decoupled from physical slot order.
 
+Late materialization (ISSUE 5): row-subsetting ops do not copy the
+tensors.  A frame may instead carry a ``RowView`` — a list of
+``ViewBlock`` s, each pairing base (itensor, ftensor) payloads with a
+row-index *selection vector* — and every ``ColumnMeta`` names the block
+it lives in.  ``take``/``mask_rows``/``filter``/``sort`` compose the
+selection vectors (an int64 gather per block, never a payload copy) and
+joins stack blocks from both sides, so a multi-join chain accumulates
+indices and performs **one** payload gather per base table when
+``materialize()`` fires at a pipeline exit (column decode, tensor
+append, vconcat).  Column accessors (``col_values``/``col_codes``/
+``valid_array``/``column``) gather single columns through the view
+without materializing the rest.
+
 Null semantics: nullable columns carry a hidden companion column
 ``__v__<name>`` (0/1 in the int tensor) that flows through every
 relational op like any other column.
+
+Stats cache: each frame carries ``_stats`` — per-column(-combination)
+distinct counts and provable-uniqueness flags (``ColStats``), populated
+by ``TensorFrame.from_store`` (zone maps), ``GroupBy`` and ``distinct``,
+and consulted by ``join(algorithm="auto")`` so proving build-key
+uniqueness no longer costs a full sort of the build side.
 """
 from __future__ import annotations
 
@@ -53,15 +72,84 @@ def float_dtype():
 
 @dataclasses.dataclass
 class ColumnMeta:
-    """Logical column → physical storage mapping (the column indexer)."""
+    """Logical column → physical storage mapping (the column indexer).
+
+    ``block`` names the ``RowView`` block holding the column's payload
+    (always 0 for materialized frames).
+    """
 
     name: str
     kind: str  # 'int' | 'float' | 'bool' | 'date' | 'dict' | 'obj'
     slot: int  # slot in itensor (int-like kinds) or ftensor ('float'); -1 for 'obj'
     dictionary: Optional[np.ndarray] = None  # sorted uniques for 'dict'
+    block: int = 0  # RowView block index (0 when the frame is eager)
 
     def is_int_like(self) -> bool:
         return self.kind in ("int", "bool", "date", "dict")
+
+
+@dataclasses.dataclass
+class ColStats:
+    """Cached per-column(-combination) statistics for algorithm picks.
+
+    ``unique=True`` is a correctness-grade guarantee (the values — as a
+    tuple, for multi-column keys — are pairwise distinct over the
+    frame's rows); ``unique=False`` is a perf hint only (duplicates were
+    observed in a superset of the rows — a row subset may have become
+    unique, but treating it as non-unique is always safe).  ``distinct``
+    is the exact non-null distinct count when known.
+
+    ``vmin``/``vmax`` bound an int-like column's values (possibly over a
+    *superset* of the rows — row subsetting and join gathers can only
+    shrink the true range, so stale bounds stay valid for range
+    compression).  Seeded from store zone maps, computed once (one
+    fused device fetch) otherwise — they make repeat joins sync-free.
+    """
+
+    unique: Optional[bool] = None
+    distinct: Optional[int] = None
+    vmin: Optional[int] = None
+    vmax: Optional[int] = None
+
+
+class ViewBlock:
+    """One late-materialization source: base payload tensors + the id
+    of its selection vector in the owning view's row matrix.
+    ``row_id=None`` means identity (the base tensors are already
+    aligned with the frame's logical rows)."""
+
+    __slots__ = ("itensor", "ftensor", "row_id")
+
+    def __init__(self, itensor, ftensor, row_id: Optional[int]):
+        self.itensor = itensor
+        self.ftensor = ftensor
+        self.row_id = row_id
+
+
+class RowView:
+    """The selection-vector representation.
+
+    ``blocks`` are the payload sources; ``rowmat`` is ONE stacked
+    ``(R, nrows)`` int64 matrix holding every block's selection vector
+    as a row.  Keeping the vectors stacked means ``take`` composes the
+    whole view with a single 2-D gather (``rowmat[:, rows]``) no
+    matter how many base tables a join chain has accumulated.
+    """
+
+    __slots__ = ("blocks", "rowmat", "_row_cache")
+
+    def __init__(self, blocks: List[ViewBlock], rowmat: Optional[jax.Array]):
+        self.blocks = blocks
+        self.rowmat = rowmat
+        self._row_cache: Dict[int, jax.Array] = {}
+
+    def rows_of(self, block: ViewBlock) -> Optional[jax.Array]:
+        rid = block.row_id
+        if rid is None:
+            return None
+        if rid not in self._row_cache:
+            self._row_cache[rid] = self.rowmat[rid]
+        return self._row_cache[rid]
 
 
 class OffloadedColumn:
@@ -163,17 +251,232 @@ def _assemble_frame(
 class TensorFrame:
     def __init__(
         self,
-        itensor: jax.Array,
-        ftensor: jax.Array,
+        itensor: Optional[jax.Array],
+        ftensor: Optional[jax.Array],
         columns: Dict[str, ColumnMeta],
         offloaded: Dict[str, OffloadedColumn],
         nrows: int,
+        view: Optional[RowView] = None,
     ):
-        self.itensor = itensor
-        self.ftensor = ftensor
+        self._itensor = itensor
+        self._ftensor = ftensor
         self.columns = columns
         self.offloaded = offloaded
         self.nrows = int(nrows)
+        self._view = view
+        self._stats: Dict[Tuple[str, ...], ColStats] = {}
+
+    @classmethod
+    def _from_view(
+        cls,
+        columns: Dict[str, ColumnMeta],
+        offloaded: Dict[str, OffloadedColumn],
+        nrows: int,
+        blocks: List[ViewBlock],
+        rowmat: Optional[jax.Array],
+    ) -> "TensorFrame":
+        return cls(None, None, columns, offloaded, nrows, RowView(blocks, rowmat))
+
+    # ------------------------------------------------------------------
+    # late materialization
+    # ------------------------------------------------------------------
+    @property
+    def is_view(self) -> bool:
+        return self._view is not None
+
+    def _view_parts(self) -> Tuple[List[ViewBlock], Optional[jax.Array]]:
+        """(blocks, rowmat) — identity block for an eager frame; the
+        join's zero-copy stacking input."""
+        if self._view is not None:
+            return self._view.blocks, self._view.rowmat
+        return [ViewBlock(self._itensor, self._ftensor, None)], None
+
+    def materialize(self) -> "TensorFrame":
+        """Resolve the view: ONE fused 2-D gather per (block, tensor)
+        of exactly the live slots, then a single horizontal concat —
+        this is the "one payload gather per base table" a join chain
+        deferred to.  In-place (caching) — logical content is
+        unchanged.  Returns ``self`` for chaining."""
+        if self._view is None:
+            return self
+        blocks = self._view.blocks
+        # live slots per block, in column order (dead columns from
+        # select()/projection pruning are never gathered)
+        per_int: List[List[int]] = [[] for _ in blocks]
+        per_float: List[List[int]] = [[] for _ in blocks]
+        within: Dict[str, int] = {}
+        for name, m in self.columns.items():
+            if m.kind == "obj":
+                continue
+            lst = per_float[m.block] if m.kind == "float" else per_int[m.block]
+            if m.slot in lst:  # two logical columns sharing a payload
+                within[name] = lst.index(m.slot)
+            else:
+                within[name] = len(lst)
+                lst.append(m.slot)
+
+        def _gather(tensor: jax.Array, slots: List[int], rows) -> jax.Array:
+            # whole-tensor row gather when every slot is live in order
+            # (the common join-chain case) — XLA's fast contiguous-row
+            # path; otherwise slice the live columns, then gather rows
+            full = slots == list(range(tensor.shape[1]))
+            sub = tensor if full else tensor[:, jnp.asarray(slots, dtype=INT)]
+            return sub if rows is None else sub[rows]
+
+        iparts: List[jax.Array] = []
+        fparts: List[jax.Array] = []
+        ioffs: List[int] = []
+        foffs: List[int] = []
+        ioff = foff = 0
+        for b, isl, fsl in zip(blocks, per_int, per_float):
+            ioffs.append(ioff)
+            foffs.append(foff)
+            rows = self._view.rows_of(b)
+            if isl:
+                iparts.append(_gather(b.itensor, isl, rows))
+                ioff += len(isl)
+            if fsl:
+                fparts.append(_gather(b.ftensor, fsl, rows))
+                foff += len(fsl)
+        self._itensor = (
+            jnp.concatenate(iparts, axis=1)
+            if len(iparts) > 1
+            else (iparts[0] if iparts else _empty_tensor(self.nrows, INT))
+        )
+        self._ftensor = (
+            jnp.concatenate(fparts, axis=1)
+            if len(fparts) > 1
+            else (fparts[0] if fparts else _empty_tensor(self.nrows, float_dtype()))
+        )
+        newcols: Dict[str, ColumnMeta] = {}
+        for name, m in self.columns.items():  # original order preserved
+            if m.kind == "obj":
+                newcols[name] = dataclasses.replace(m, block=0)
+                continue
+            base = foffs[m.block] if m.kind == "float" else ioffs[m.block]
+            newcols[name] = dataclasses.replace(
+                m, slot=base + within[name], block=0
+            )
+        self.columns = newcols
+        self._view = None
+        return self
+
+    @property
+    def itensor(self) -> jax.Array:
+        if self._view is not None:
+            self.materialize()
+        return self._itensor
+
+    @property
+    def ftensor(self) -> jax.Array:
+        if self._view is not None:
+            self.materialize()
+        return self._ftensor
+
+    # ------------------------------------------------------------------
+    # stats cache
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _stats_key(cols: Sequence[str]) -> Tuple[str, ...]:
+        return tuple(sorted(cols))
+
+    def set_stats(
+        self,
+        cols: Union[str, Sequence[str]],
+        *,
+        unique: Optional[bool] = None,
+        distinct: Optional[int] = None,
+        vmin: Optional[int] = None,
+        vmax: Optional[int] = None,
+    ) -> None:
+        key = self._stats_key([cols] if isinstance(cols, str) else cols)
+        st = self._stats.setdefault(key, ColStats())
+        if unique is not None:
+            st.unique = unique
+        if distinct is not None:
+            st.distinct = distinct
+        if vmin is not None:
+            st.vmin = vmin
+        if vmax is not None:
+            st.vmax = vmax
+
+    def col_stats(self, cols: Union[str, Sequence[str]]) -> Optional[ColStats]:
+        key = self._stats_key([cols] if isinstance(cols, str) else cols)
+        return self._stats.get(key)
+
+    def int_bounds(self, name: str) -> Tuple[int, int]:
+        """(lo, hi) bounds of a (non-empty) int-like column.
+
+        Answered from the stats cache when possible — store zone maps
+        seed it, joins/filters propagate it — else computed with ONE
+        fused device fetch and cached on this frame.  Bounds may cover
+        a superset of the rows; callers use them for range compression,
+        where a wider span is still correct.
+        """
+        st = self.col_stats(name)
+        if st is not None and st.vmin is not None:
+            return int(st.vmin), int(st.vmax)
+        arr = self.col_values(name)
+        b = np.asarray(jnp.stack([arr.min(), arr.max()]))
+        lo, hi = int(b[0]), int(b[1])
+        self.set_stats(name, vmin=lo, vmax=hi)
+        return lo, hi
+
+    def unique_hint(self, cols: Sequence[str]) -> Optional[bool]:
+        """Is the column combination provably unique (/ non-unique)?
+
+        ``True`` is correctness-grade (safe to direct-address a join
+        build side); ``False`` is a perf hint; ``None`` means unknown.
+        Any single member column being unique makes the combination
+        unique.
+        """
+        st = self._stats.get(self._stats_key(cols))
+        if st is not None and st.unique is not None:
+            return st.unique
+        for c in cols:
+            s1 = self._stats.get((c,))
+            if s1 is not None and s1.unique:
+                return True
+        return None
+
+    def _drop_stats_mentioning(self, name: str) -> None:
+        """Invalidate every cached stat involving ``name`` — a column
+        replacement voids single-column AND combination entries (a
+        stale combo uniqueness would mis-drive the join pick)."""
+        self._stats = {k: v for k, v in self._stats.items() if name not in k}
+
+    def _inherit_stats(
+        self,
+        child: "TensorFrame",
+        mode: str,
+        mapping: Optional[Dict[str, str]] = None,
+    ) -> None:
+        """Propagate stats onto ``child``.
+
+        ``mode``: 'permutation' keeps everything (same row multiset),
+        'subset' keeps unique flags and value bounds but drops distinct
+        counts (rows were removed), 'bounds' keeps only value bounds
+        (rows may repeat — join gathers), 'columns' keeps everything
+        (row set unchanged).  Entries whose columns do not all survive
+        in ``child`` are dropped; ``mapping`` renames columns.
+        """
+        for key, st in self._stats.items():
+            cols = [mapping.get(c, c) for c in key] if mapping else list(key)
+            if not all(c in child.columns for c in cols):
+                continue
+            if mode == "permutation" or mode == "columns":
+                new = dataclasses.replace(st)
+            elif mode == "subset":
+                if st.unique is None and st.vmin is None:
+                    continue
+                new = ColStats(unique=st.unique, vmin=st.vmin, vmax=st.vmax)
+            elif mode == "bounds":
+                if st.vmin is None:
+                    continue
+                new = ColStats(vmin=st.vmin, vmax=st.vmax)
+            else:
+                raise ValueError(mode)
+            child._stats[child._stats_key(cols)] = new
 
     # ------------------------------------------------------------------
     # construction
@@ -248,6 +551,11 @@ class TensorFrame:
         re-factorization, and frames built from the same store share
         dictionary objects, making join-time dictionary merges
         identity operations.
+
+        Zone-map statistics thread through: columns the chunk stats
+        prove unique (or duplicate-bearing) seed the frame's stats
+        cache, so downstream ``join(algorithm="auto")`` picks its
+        build strategy without sorting the build side.
         """
         from repro import store as _store
 
@@ -288,7 +596,35 @@ class TensorFrame:
                     offloaded[name] = OffloadedColumn(mc.values)
             else:  # int / date / bool days already in physical form
                 int_cols.append((name, mc.values, mc.ctype, None))
-        return _assemble_frame(int_cols, float_cols, offloaded, order, n)
+        out = _assemble_frame(int_cols, float_cols, offloaded, order, n)
+        # thread zone-map uniqueness/distinct/bounds stats into the
+        # frame so joins and group-bys skip their probing work
+        unfiltered = not predicates and n == table.nrows
+        for name in order:
+            if name not in table.columns:
+                continue
+            col = table.columns[name]
+            if col.ctype == "float":
+                continue
+            unique, distinct = col.uniqueness_from_stats()
+            if unique is True:
+                # uniqueness survives any row filtering (subset)
+                out.set_stats(
+                    name,
+                    unique=True,
+                    distinct=distinct if unfiltered else None,
+                )
+            elif unique is False and unfiltered:
+                out.set_stats(name, unique=False, distinct=distinct)
+            if n and col.ctype in ("int", "date", "bool") and col.encoding != "dict":
+                mins, maxs, exact = col.zone_bounds()
+                if exact and not np.isnan(mins).all():
+                    out.set_stats(
+                        name,
+                        vmin=int(np.nanmin(mins)),
+                        vmax=int(np.nanmax(maxs)),
+                    )
+        return out
 
     # ------------------------------------------------------------------
     # basic introspection
@@ -312,33 +648,45 @@ class TensorFrame:
     def valid_array(self, name: str) -> Optional[jax.Array]:
         vn = _valid_name(name)
         if vn in self.columns:
-            return self.itensor[:, self.columns[vn].slot] != 0
+            return self.col_values(vn) != 0
         return None
 
     # ------------------------------------------------------------------
     # column access
     # ------------------------------------------------------------------
+    def _raw_values(self, m: ColumnMeta) -> jax.Array:
+        """Device payload of one non-obj column, gathered through the
+        view when lazy (a single-column gather — no materialization)."""
+        if self._view is not None:
+            b = self._view.blocks[m.block]
+            arr = (b.ftensor if m.kind == "float" else b.itensor)[:, m.slot]
+            rows = self._view.rows_of(b)
+            return arr if rows is None else arr[rows]
+        t = self._ftensor if m.kind == "float" else self._itensor
+        return t[:, m.slot]
+
     def col_values(self, name: str) -> jax.Array:
         """Device numeric representation (codes for dict columns)."""
         m = self.meta(name)
         if m.kind == "obj":
             codes, _ = self.offloaded[name].codes()
             return codes
-        if m.kind == "float":
-            return self.ftensor[:, m.slot]
-        return self.itensor[:, m.slot]
+        return self._raw_values(m)
 
     def col_codes(self, name: str) -> Tuple[jax.Array, np.ndarray]:
         """(codes, dictionary) for any string-typed column."""
         m = self.meta(name)
         if m.kind == "dict":
-            return self.itensor[:, m.slot], m.dictionary
+            return self._raw_values(m), m.dictionary
         if m.kind == "obj":
             return self.offloaded[name].codes()
         raise TypeError(f"column {name} is not string-typed (kind={m.kind})")
 
     def column(self, name: str) -> np.ndarray:
-        """Decode a column back to host numpy (for users/tests)."""
+        """Decode a column back to host numpy (for users/tests).
+
+        A pipeline exit: gathers exactly this column through the view.
+        """
         m = self.meta(name)
         valid = self.valid_array(name)
         if m.kind == "obj":
@@ -348,14 +696,18 @@ class TensorFrame:
                 out[~np.asarray(valid)] = None
             return out
         if m.kind == "float":
-            out = np.asarray(self.ftensor[:, m.slot])
+            out = np.asarray(self._raw_values(m))
             if valid is not None:
                 out = out.copy()
                 out[~np.asarray(valid)] = np.nan
             return out
-        raw = np.asarray(self.itensor[:, m.slot])
+        raw = np.asarray(self._raw_values(m))
         if m.kind == "dict":
-            safe = np.clip(raw, 0, max(0, m.dictionary.shape[0] - 1))
+            if m.dictionary.shape[0] == 0:
+                # empty dictionary (e.g. null rows stitched against an
+                # empty build side): every cell is null
+                return np.full(raw.shape, None, dtype=object)
+            safe = np.clip(raw, 0, m.dictionary.shape[0] - 1)
             out = m.dictionary[safe].astype(object)
             if valid is not None:
                 out[~np.asarray(valid)] = None
@@ -378,27 +730,78 @@ class TensorFrame:
     # ------------------------------------------------------------------
     # row ops
     # ------------------------------------------------------------------
-    def take(self, rows: Union[jax.Array, np.ndarray]) -> "TensorFrame":
+    def take(
+        self,
+        rows: Union[jax.Array, np.ndarray],
+        *,
+        stats: str = "none",
+    ) -> "TensorFrame":
+        """Select rows by index.
+
+        Late-materializing by default: the result is a ``RowView``
+        frame whose blocks compose ``rows`` into their selection
+        vectors — no payload is copied until ``materialize()``.
+
+        ``stats`` declares what the caller knows about ``rows`` for
+        stats propagation: 'permutation' (every row exactly once),
+        'subset' (no row more than once), 'none' (may repeat rows —
+        drop all cached stats).
+        """
         rows = jnp.asarray(rows, dtype=INT)
-        it = self.itensor[rows] if self.itensor.shape[1] else _empty_tensor(rows.shape[0], INT)
-        ft = (
-            self.ftensor[rows]
-            if self.ftensor.shape[1]
-            else _empty_tensor(rows.shape[0], float_dtype())
-        )
+        n = int(rows.shape[0])
         off = {k: v.take(rows) for k, v in self.offloaded.items()}
-        return TensorFrame(it, ft, dict(self.columns), off, int(rows.shape[0]))
+        if CONFIG.late_materialization:
+            v = self._view
+            if v is None:
+                blocks = [ViewBlock(self._itensor, self._ftensor, 0)]
+                rowmat = rows[None, :]
+            else:
+                # compose EVERY block's selection vector in one 2-D
+                # gather; identity blocks share one new vector (= rows)
+                mats = []
+                ident_id: Optional[int] = None
+                if v.rowmat is not None:
+                    mats.append(v.rowmat[:, rows])
+                if any(b.row_id is None for b in v.blocks):
+                    ident_id = 0 if v.rowmat is None else int(v.rowmat.shape[0])
+                    mats.append(rows[None, :])
+                rowmat = mats[0] if len(mats) == 1 else jnp.concatenate(mats, axis=0)
+                blocks = [
+                    ViewBlock(
+                        b.itensor,
+                        b.ftensor,
+                        ident_id if b.row_id is None else b.row_id,
+                    )
+                    for b in v.blocks
+                ]
+            out = TensorFrame._from_view(dict(self.columns), off, n, blocks, rowmat)
+        else:
+            it = (
+                self.itensor[rows]
+                if self.itensor.shape[1]
+                else _empty_tensor(n, INT)
+            )
+            ft = (
+                self.ftensor[rows]
+                if self.ftensor.shape[1]
+                else _empty_tensor(n, float_dtype())
+            )
+            out = TensorFrame(it, ft, dict(self.columns), off, n)
+        if stats in ("permutation", "subset"):
+            self._inherit_stats(out, stats)
+        return out
 
     def head(self, n: int) -> "TensorFrame":
         n = min(n, self.nrows)
-        return self.take(jnp.arange(n, dtype=INT))
+        return self.take(jnp.arange(n, dtype=INT), stats="subset")
 
     def mask_rows(self, mask: jax.Array) -> "TensorFrame":
-        """Compact rows where mask is True (eager: host-syncs the count)."""
+        """Compact rows where mask is True (one host sync for the
+        count; the payload gather is deferred behind the view)."""
         mask = jnp.asarray(mask)
         count = int(mask.sum())
         idx = jnp.nonzero(mask, size=count)[0].astype(INT)
-        return self.take(idx)
+        return self.take(idx, stats="subset")
 
     def filter(self, expr) -> "TensorFrame":
         from .expr import Expr
@@ -423,7 +826,11 @@ class TensorFrame:
             vn = _valid_name(name)
             if vn in self.columns:
                 cols[vn] = self.columns[vn]
-        return TensorFrame(self.itensor, self.ftensor, cols, off, self.nrows)
+        out = TensorFrame(
+            self._itensor, self._ftensor, cols, off, self.nrows, self._view
+        )
+        self._inherit_stats(out, "columns")
+        return out
 
     def drop(self, names: Sequence[str]) -> "TensorFrame":
         keep = [c for c in self.column_names if c not in set(names)]
@@ -441,7 +848,11 @@ class TensorFrame:
             cols[new] = dataclasses.replace(m, name=new)
             if m.kind == "obj":
                 off[new] = self.offloaded[name]
-        return TensorFrame(self.itensor, self.ftensor, cols, off, self.nrows)
+        out = TensorFrame(
+            self._itensor, self._ftensor, cols, off, self.nrows, self._view
+        )
+        self._inherit_stats(out, "columns", mapping=mapping)
+        return out
 
     def _append_int_column(
         self,
@@ -450,31 +861,44 @@ class TensorFrame:
         kind: str = "int",
         dictionary: Optional[np.ndarray] = None,
     ) -> "TensorFrame":
+        self.materialize()  # pipeline exit: appends rebuild the tensor
         values = jnp.asarray(values, dtype=INT).reshape(self.nrows, 1)
-        it = jnp.concatenate([self.itensor, values], axis=1)
+        it = jnp.concatenate([self._itensor, values], axis=1)
         cols = dict(self.columns)
         cols.pop(name, None)
-        cols[name] = ColumnMeta(name, kind, self.itensor.shape[1], dictionary)
+        cols[name] = ColumnMeta(name, kind, self._itensor.shape[1], dictionary)
         off = dict(self.offloaded)
         off.pop(name, None)
-        return TensorFrame(it, self.ftensor, cols, off, self.nrows)
+        out = TensorFrame(it, self._ftensor, cols, off, self.nrows)
+        self._inherit_stats(out, "columns")
+        out._drop_stats_mentioning(name)  # the name may have been replaced
+        return out
 
     def _append_float_column(self, name: str, values: jax.Array) -> "TensorFrame":
+        self.materialize()
         values = jnp.asarray(values, dtype=float_dtype()).reshape(self.nrows, 1)
-        ft = jnp.concatenate([self.ftensor, values], axis=1)
+        ft = jnp.concatenate([self._ftensor, values], axis=1)
         cols = dict(self.columns)
         cols.pop(name, None)
-        cols[name] = ColumnMeta(name, "float", self.ftensor.shape[1])
+        cols[name] = ColumnMeta(name, "float", self._ftensor.shape[1])
         off = dict(self.offloaded)
         off.pop(name, None)
-        return TensorFrame(self.itensor, ft, cols, off, self.nrows)
+        out = TensorFrame(self._itensor, ft, cols, off, self.nrows)
+        self._inherit_stats(out, "columns")
+        out._drop_stats_mentioning(name)
+        return out
 
     def _append_offloaded(self, name: str, col: OffloadedColumn) -> "TensorFrame":
         cols = dict(self.columns)
         cols[name] = ColumnMeta(name, "obj", -1)
         off = dict(self.offloaded)
         off[name] = col
-        return TensorFrame(self.itensor, self.ftensor, cols, off, self.nrows)
+        out = TensorFrame(
+            self._itensor, self._ftensor, cols, off, self.nrows, self._view
+        )
+        self._inherit_stats(out, "columns")
+        out._drop_stats_mentioning(name)
+        return out
 
     def with_column(self, name: str, expr) -> "TensorFrame":
         from .expr import Expr, Value
@@ -574,7 +998,8 @@ class TensorFrame:
         cols = ", ".join(
             f"{name}:{self.columns[name].kind}" for name in self.column_names
         )
-        return f"TensorFrame({self.nrows} rows; {cols})"
+        tag = " view" if self._view is not None else ""
+        return f"TensorFrame({self.nrows} rows{tag}; {cols})"
 
     def show(self, n: int = 8) -> str:
         names = self.column_names

@@ -31,8 +31,8 @@ class GroupBy:
     def __init__(self, frame: TensorFrame, keys: List[str]):
         self.frame = frame
         self.keys = keys
-        packed, self.exact = hashing.composite_key(frame, keys)
-        self.uniques, self.gids, self.m = hashing.distinct(packed)
+        packed, self.exact, dense_domain = hashing.composite_key(frame, keys)
+        self.uniques, self.gids, self.m = hashing.distinct(packed, dense_domain)
         # representative (first-occurrence) row per group
         if frame.nrows:
             self.rep = jax.ops.segment_min(
@@ -49,7 +49,7 @@ class GroupBy:
         specs = normalize_specs(specs)
         # key columns come from the representative rows, preserving
         # original values (and dictionaries) exactly
-        out = self.frame.take(self.rep).select(self.keys)
+        out = self.frame.take(self.rep, stats="subset").select(self.keys)
         for out_name, fn, colname in specs:
             vals = segment_agg(self.frame, self.gids, self.m, fn, colname)
             if fn == "first":
@@ -64,6 +64,15 @@ class GroupBy:
                 out = out._append_float_column(out_name, vals)
             else:
                 out = out._append_int_column(out_name, vals)
+        # the grouped output is unique by construction on its key
+        # combination: seed the stats cache so a downstream
+        # join(algorithm='auto') direct-addresses without a sort test.
+        # Not when an aggregate output overwrote a key column — its
+        # values are no longer the group keys.
+        if not (set(self.keys) & {name for name, _, _ in specs}):
+            out.set_stats(self.keys, unique=True, distinct=self.m)
+            if len(self.keys) == 1:
+                out.set_stats(self.keys[0], unique=True, distinct=self.m)
         return out
 
     def size(self, name: str = "size") -> TensorFrame:
@@ -75,12 +84,20 @@ class GroupBy:
 
 def unique_rows(frame: TensorFrame, keys: List[str]) -> TensorFrame:
     gb = GroupBy(frame, keys)
-    return frame.take(gb.rep).select(keys)
+    out = frame.take(gb.rep, stats="subset").select(keys)
+    out.set_stats(keys, unique=True, distinct=gb.m)
+    if len(keys) == 1:
+        out.set_stats(keys[0], unique=True, distinct=gb.m)
+    return out
 
 
 def nunique_column(frame: TensorFrame, name: str) -> int:
     codes, _ = hashing.key_codes(frame, name)
     _, _, m = hashing.distinct(codes)
+    # cache on the source frame: a later join build against this column
+    # skips its uniqueness sort test
+    if not frame.has_nulls(name):
+        frame.set_stats(name, unique=(m == frame.nrows), distinct=m)
     return m
 
 
@@ -122,8 +139,13 @@ def transposed_group_ids(cols: Sequence[np.ndarray]) -> np.ndarray:
     one-pass packed composite + sort-based distinct."""
     arrs = [jnp.asarray(np.asarray(c).astype(np.int64)) for c in cols]
     packed = jnp.zeros(arrs[0].shape, dtype=INT)
-    for a in arrs:
-        card = int(a.max()) + 1 if a.shape[0] else 1
-        packed = packed * np.int64(max(1, card)) + a
+    if arrs[0].shape[0]:
+        # all k cardinalities in ONE device fetch (was: one int(a.max())
+        # host sync per key column)
+        cards = np.asarray(jnp.stack([a.max() for a in arrs])) + 1
+    else:
+        cards = np.ones((len(arrs),), dtype=np.int64)
+    for a, card in zip(arrs, cards):
+        packed = packed * np.int64(max(1, int(card))) + a
     _, gids, _ = hashing.distinct(packed)
     return np.asarray(gids)

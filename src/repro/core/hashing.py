@@ -16,7 +16,7 @@ Dict insert.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -56,24 +56,23 @@ def key_codes(frame: TensorFrame, name: str) -> Tuple[jax.Array, int]:
     """
     m = frame.meta(name)
     if m.kind == "dict":
-        return frame.itensor[:, m.slot], int(m.dictionary.shape[0])
+        return frame.col_values(name), int(m.dictionary.shape[0])
     if m.kind == "obj":
         codes, dictionary = frame.offloaded[name].codes()
         return codes, int(dictionary.shape[0])
     if m.kind == "float":
         # group-by on measures (e.g. TPC-H Q10's c_acctbal): bitcast to
         # integer lanes — bit equality == value equality for our data
-        f = frame.ftensor[:, m.slot]
+        f = frame.col_values(name)
         arr = jax.lax.bitcast_convert_type(f, jnp.int64 if f.dtype == jnp.float64 else jnp.int32).astype(INT)
         if arr.shape[0] == 0:
             return arr, 1
         uniq = jnp.unique(arr)
         return jnp.searchsorted(uniq, arr).astype(INT), int(uniq.shape[0])
-    arr = frame.itensor[:, m.slot]
+    arr = frame.col_values(name)
     if arr.shape[0] == 0:
         return arr, 1
-    lo = int(arr.min())
-    hi = int(arr.max())
+    lo, hi = frame.int_bounds(name)  # cached; one fused fetch on miss
     span = hi - lo + 1
     if span <= max(4 * arr.shape[0], 1 << 20):
         return arr - lo, span
@@ -84,12 +83,16 @@ def key_codes(frame: TensorFrame, name: str) -> Tuple[jax.Array, int]:
 
 def composite_key(
     frame: TensorFrame, keys: Sequence[str]
-) -> Tuple[jax.Array, bool]:
+) -> Tuple[jax.Array, bool, Optional[int]]:
     """Single int64 composite key per row.
 
-    Returns (key_array, exact) — exact=True when keys pack losslessly.
-    This is the transposed single-pass construction of Alg. 2: all key
-    columns are gathered first ("transpose"), then combined row-wise.
+    Returns (key_array, exact, dense_domain) — exact=True when keys
+    pack losslessly; dense_domain is the packed domain size when every
+    packed value is additionally guaranteed non-negative (no dict/obj
+    null sentinels), which lets ``distinct`` take its sort-free dense
+    path.  This is the transposed single-pass construction of Alg. 2:
+    all key columns are gathered first ("transpose"), then combined
+    row-wise.
     """
     cols: List[Tuple[jax.Array, int]] = [key_codes(frame, k) for k in keys]
     prod = 1
@@ -101,17 +104,79 @@ def composite_key(
         packed = jnp.zeros((frame.nrows,), dtype=INT)
         for codes, card in cols:
             packed = packed * np.int64(max(1, card)) + codes.astype(INT)
-        return packed, True
-    return hash_combine([c for c, _ in cols]), False
+        dense_ok = all(
+            not (
+                frame.meta(k).kind in ("dict", "obj") and frame.has_nulls(k)
+            )
+            for k in keys
+        )
+        return packed, True, (prod if dense_ok else None)
+    return hash_combine([c for c, _ in cols]), False, None
 
 
-def distinct(packed: jax.Array) -> Tuple[jax.Array, jax.Array, int]:
-    """(sorted_uniques, group_ids, n_groups). Host-syncs n_groups."""
+#: Fuse the dense-distinct phases with jit at this size (shapes repeat
+#: in real workloads; small test shapes stay op-by-op, no compiles).
+_JIT_MIN_ROWS = 1 << 17
+
+
+def _dense_rank(packed: jax.Array, domain: int):
+    present = jnp.zeros((domain,), dtype=INT).at[packed].set(1)
+    ranks = jnp.cumsum(present) - 1  # value -> its sorted-unique id
+    return present, ranks
+
+
+def _dense_compact(packed, present, ranks, m: int):
+    gids = ranks[packed]
+    dest = jnp.where(present == 1, ranks, np.int64(m))
+    uniques = (
+        jnp.zeros((m + 1,), dtype=packed.dtype)
+        .at[dest]
+        .set(jnp.arange(present.shape[0], dtype=packed.dtype))[:m]
+    )
+    return uniques, gids.astype(INT)
+
+
+_dense_rank_jit = jax.jit(_dense_rank, static_argnums=(1,))
+_dense_compact_jit = jax.jit(_dense_compact, static_argnums=(3,))
+
+
+def distinct(
+    packed: jax.Array, domain: Optional[int] = None
+) -> Tuple[jax.Array, jax.Array, int]:
+    """(sorted_uniques, group_ids, n_groups). Host-syncs n_groups.
+
+    Dense path: when the caller knows the packed values are dense
+    non-negative codes over a small ``domain`` (exact composite
+    packing), distinct-finding needs NO sort at all — scatter presence
+    bits, prefix-sum them into ranks, gather.  O(n + domain), the
+    classic dense group-by.
+
+    Sort path: one argsort + run boundaries + two scatters: group ids
+    are the run ranks scattered back through the sort permutation, and
+    the uniques compact by rank — no second sort (``jnp.unique``) and
+    no binary search.  Either path syncs only the single deferred
+    n_groups fetch.
+    """
     n = int(packed.shape[0])
     if n == 0:
         return packed, packed, 0
-    sorted_p = jnp.sort(packed)
-    m = int((jnp.diff(sorted_p) != 0).sum()) + 1
-    uniques = jnp.unique(packed, size=m)
-    gids = jnp.searchsorted(uniques, packed).astype(INT)
+    if domain is not None and 0 < domain <= 4 * n:  # O(n+domain) stays O(n)
+        jit = n >= _JIT_MIN_ROWS
+        present, ranks = (_dense_rank_jit if jit else _dense_rank)(
+            packed, domain
+        )
+        m = int(ranks[-1]) + 1  # the one host sync
+        uniques, gids = (_dense_compact_jit if jit else _dense_compact)(
+            packed, present, ranks, m
+        )
+        return uniques, gids, m
+    order = jnp.argsort(packed)
+    sp = packed[order]
+    boundary = jnp.concatenate(
+        [jnp.ones((1,), dtype=bool), sp[1:] != sp[:-1]]
+    )
+    ranks = jnp.cumsum(boundary.astype(INT)) - 1  # group id, sorted order
+    m = int(ranks[-1]) + 1  # the one host sync
+    uniques = jnp.zeros((m,), dtype=packed.dtype).at[ranks].set(sp)
+    gids = jnp.zeros((n,), dtype=INT).at[order].set(ranks)
     return uniques, gids, m

@@ -3,20 +3,27 @@
 Pipeline:
 
 1. **Shared factorization** of each key pair into one dense integer
-   space (dictionary merge for strings, combined-domain densify for
-   ints) — Alg. 3 line 5.
+   space (dictionary merge for strings, device-side range compression
+   for ints — one bounds fetch, no host unique — with a combined-domain
+   densify fallback for sparse domains) — Alg. 3 line 5.
 2. **Composite packing** of multi-column keys (Horner over shared
    cardinalities, densifying between steps so the packed domain stays
    O(n) — always exact).
 3. **Build/probe**: the Mojo hash table becomes a *direct-address
    table* (dense codes are a perfect hash): scatter build positions,
-   gather probes — O(1) probes, no collisions, fully vectorized.
-   Non-unique build keys fall back to sorted-probe (searchsorted + CSR
-   expansion).  ``sort_merge_join_rows`` is the paper's losing baseline
-   (Fig. 12).
-4. **Materialization**: parallel row gathers on both sides (Alg. 3
-   line 8), then a zero-copy horizontal stack of the two frames'
-   tensors.
+   gather probes — O(1) probes, no collisions, fully vectorized.  The
+   build-side uniqueness decision is **stats-driven**: cached
+   distinct/uniqueness stats (store zone maps, group-by outputs, prior
+   joins) are consulted first, and only an unknown build side pays the
+   sort-based test.  Non-unique build keys take sorted-probe
+   (searchsorted + CSR expansion via the run-rank formulation shared
+   with ``kernels/segment_reduce``).  ``sort_merge_join_rows`` is the
+   paper's losing baseline (Fig. 12).
+4. **Materialization**: *late* — matched row indices compose into the
+   frames' ``RowView`` selection vectors and the two sides' payload
+   blocks stack zero-copy, so a join chain gathers payloads once at the
+   pipeline exit.  The probe compaction runs on-device (cumsum +
+   scatter) behind a single deferred count fetch per join.
 
 Supported: inner, left (outer), semi, anti — left/semi/anti go beyond
 the paper (it defers them) but are required by TPC-H Q13/Q4/Q21/Q22.
@@ -26,6 +33,7 @@ nulls -2, and both build and probe paths reject negatives.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Sequence, Tuple, Union
 
 import numpy as np
@@ -33,17 +41,35 @@ import jax
 import jax.numpy as jnp
 
 from . import encoding
+from .config import CONFIG
 from .frame import (
     INT,
     ColumnMeta,
     OffloadedColumn,
     TensorFrame,
+    ViewBlock,
+    _empty_tensor,
     _is_hidden,
     _valid_name,
+    float_dtype,
 )
 
 _DENSIFY_LIMIT_FACTOR = 4
 VALID_PREFIX = "__v__"
+
+#: Observable decision counters (tests / benchmarks): how often the
+#: auto algorithm pick was answered by the stats cache vs. paying the
+#: sort-based uniqueness test.
+STATS = {
+    "stats_unique_hits": 0,
+    "stats_nonunique_hits": 0,
+    "uniqueness_sort_tests": 0,
+}
+
+
+def reset_stats() -> None:
+    for k in STATS:
+        STATS[k] = 0
 
 
 def _as_list(x) -> List[str]:
@@ -77,18 +103,37 @@ def shared_key_codes(
         )
     if lm.kind == "float" or rm.kind == "float":
         raise TypeError("cannot join on float columns")
-    la = np.asarray(left.itensor[:, lm.slot])
-    ra_ = np.asarray(right.itensor[:, rm.slot])
-    ca, cb, domain = encoding.shared_codes_numeric(la, ra_)
+    la = left.col_values(lname)
+    ra = right.col_values(rname)
+    nl, nr = int(la.shape[0]), int(ra.shape[0])
+    if nl == 0 and nr == 0:
+        return la.astype(INT), ra.astype(INT), 1
+    # range compression from cached bounds (store zone maps seed them,
+    # joins/filters propagate them): after the first touch of a column
+    # the join issues NO bounds sync — just the one count fetch
+    los, his = [], []
+    if nl:
+        b = left.int_bounds(lname)
+        los.append(b[0])
+        his.append(b[1])
+    if nr:
+        b = right.int_bounds(rname)
+        los.append(b[0])
+        his.append(b[1])
+    lo, hi = min(los), max(his)
+    span = hi - lo + 1
+    if span <= max(1 << 20, _DENSIFY_LIMIT_FACTOR * (nl + nr)):
+        return (la - lo).astype(INT), (ra - lo).astype(INT), span
+    # sparse domain fallback: densify over the combined key set
+    ca, cb, domain = encoding.shared_codes_numeric(np.asarray(la), np.asarray(ra))
     return jnp.asarray(ca), jnp.asarray(cb), domain
 
 
 def _densify_pair(lp: jax.Array, rp: jax.Array) -> Tuple[jax.Array, jax.Array, int]:
-    uniq = np.unique(np.concatenate([np.asarray(lp), np.asarray(rp)]))
-    u = jnp.asarray(uniq)
+    uniq = jnp.unique(jnp.concatenate([lp, rp]))
     return (
-        jnp.searchsorted(u, lp).astype(INT),
-        jnp.searchsorted(u, rp).astype(INT),
+        jnp.searchsorted(uniq, lp).astype(INT),
+        jnp.searchsorted(uniq, rp).astype(INT),
         int(uniq.shape[0]),
     )
 
@@ -101,6 +146,9 @@ def composite_join_codes(
 ) -> Tuple[jax.Array, jax.Array, int]:
     """Pack multi-column join keys into one shared dense space (exact)."""
     nl, nr = left.nrows, right.nrows
+    if len(left_on) == 1:  # single key: no Horner packing round
+        lc, rc, card = shared_key_codes(left, right, left_on[0], right_on[0])
+        return lc.astype(INT), rc.astype(INT), max(1, int(card))
     limit = max(1 << 20, _DENSIFY_LIMIT_FACTOR * (nl + nr))
     lp = jnp.zeros((nl,), dtype=INT)
     rp = jnp.zeros((nr,), dtype=INT)
@@ -121,6 +169,50 @@ def composite_join_codes(
 # ----------------------------------------------------------------------
 # row-pair computation
 # ----------------------------------------------------------------------
+#: Inputs at least this long run the direct-address probe as two
+#: jit-fused kernels (one per side of the single count sync).  Smaller
+#: inputs stay op-by-op — compiling per (shape, domain) would cost more
+#: than it saves on the many small unique shapes of a test suite.
+_JIT_MIN_ROWS = 1 << 17
+
+
+def _dar_probe(probe: jax.Array, build: jax.Array, domain: int):
+    """Build + probe the direct-address table; everything up to (and
+    fused behind) the one deferred match count."""
+    nb = build.shape[0]
+    # slot `domain` holds null build rows, slot `domain+1` is probed by
+    # null probe rows and never written: matched is a single compare
+    tbl = jnp.full((domain + 2,), np.int64(-1))
+    build_idx = jnp.where(build >= 0, build, np.int64(domain))
+    tbl = tbl.at[build_idx].set(jnp.arange(nb, dtype=INT))
+    probe_idx = jnp.where(
+        probe >= 0,
+        jnp.minimum(probe, np.int64(max(0, domain - 1))),
+        np.int64(domain + 1),
+    )
+    pos = tbl[probe_idx]
+    matched = pos >= 0
+    slots = jnp.cumsum(matched.astype(INT))
+    return pos, matched, slots
+
+
+def _dar_compact(pos, matched, slots, cnt: int):
+    """Stream-compact the matched probe rows into (probe_rows,
+    build_rows) given the synced count."""
+    npr = matched.shape[0]
+    dest = jnp.where(matched, slots - 1, np.int64(cnt))
+    probe_rows = (
+        jnp.zeros((cnt + 1,), dtype=INT)
+        .at[dest]
+        .set(jnp.arange(npr, dtype=INT))[:cnt]
+    )
+    return probe_rows, pos[probe_rows]
+
+
+_dar_probe_jit = jax.jit(_dar_probe, static_argnums=(2,))
+_dar_compact_jit = jax.jit(_dar_compact, static_argnums=(3,))
+
+
 def direct_address_rows(
     probe: jax.Array, build: jax.Array, domain: int
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -128,17 +220,21 @@ def direct_address_rows(
 
     Returns (matched mask over probe rows, probe_rows, build_rows).
     Negative codes (nulls) on either side never match; null build rows
-    scatter into a trash slot that probes cannot reach.
+    scatter into a trash slot that probes cannot reach.  The matched
+    rows are compacted on-device (prefix sum + scatter) behind a single
+    deferred count fetch — no ``nonzero`` host round-trip — and large
+    probes run the whole thing as two fused kernels.
     """
-    nb = int(build.shape[0])
-    tbl = jnp.full((domain + 1,), np.int64(-1))
-    build_idx = jnp.where(build >= 0, build, np.int64(domain))
-    tbl = tbl.at[build_idx].set(jnp.arange(nb, dtype=INT))
-    pos = tbl[jnp.clip(probe, 0, max(0, domain - 1))]
-    matched = (pos >= 0) & (probe >= 0)
-    cnt = int(matched.sum())
-    probe_rows = jnp.nonzero(matched, size=cnt)[0].astype(INT)
-    build_rows = pos[probe_rows]
+    npr = int(probe.shape[0])
+    use_jit = npr >= _JIT_MIN_ROWS
+    probe_fn = _dar_probe_jit if use_jit else _dar_probe
+    pos, matched, slots = probe_fn(probe, build, domain)
+    if npr == 0:
+        empty = jnp.zeros((0,), dtype=INT)
+        return matched, empty, empty
+    cnt = int(slots[-1])  # the one host sync of the probe
+    compact_fn = _dar_compact_jit if use_jit else _dar_compact
+    probe_rows, build_rows = compact_fn(pos, matched, slots, cnt)
     return matched, probe_rows, build_rows
 
 
@@ -146,24 +242,27 @@ def sorted_probe_rows(
     probe: jax.Array, build: jax.Array
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Many-to-many probe: sort build side once, binary-search ranges,
-    expand via CSR arithmetic.  Returns (counts, probe_rows, build_rows)."""
+    expand via CSR arithmetic.  Returns (counts, probe_rows, build_rows).
+
+    The expansion ranks each output row within its probe's match run
+    using the run-boundary formulation shared with the Pallas segmented
+    reduction (``kernels.segment_reduce.run_ranks_sorted``), replacing
+    two of the three repeats with gathers.
+    """
+    from repro.kernels.segment_reduce import run_ranks_sorted
+
     npr = int(probe.shape[0])
     order = jnp.argsort(build)
     sb = build[order]
     starts = jnp.searchsorted(sb, probe, side="left")
     ends = jnp.searchsorted(sb, probe, side="right")
     counts = (ends - starts).astype(INT)
-    total = int(counts.sum())
+    total = int(counts.sum())  # the one host sync of the probe
     probe_rows = jnp.repeat(
         jnp.arange(npr, dtype=INT), counts, total_repeat_length=total
     )
-    offsets = jnp.cumsum(counts) - counts
-    within = jnp.arange(total, dtype=INT) - jnp.repeat(
-        offsets, counts, total_repeat_length=total
-    )
-    build_rows = order[
-        jnp.repeat(starts.astype(INT), counts, total_repeat_length=total) + within
-    ]
+    within = run_ranks_sorted(probe_rows)
+    build_rows = order[starts.astype(INT)[probe_rows] + within]
     return counts, probe_rows, build_rows
 
 
@@ -190,8 +289,6 @@ def _membership_routed(probe: jax.Array, build: jax.Array) -> jax.Array:
     """Membership with an optional sharded route: the probe side shards
     over a data mesh, the (small) build side broadcasts to every shard
     (repro.dist.dframe.dist_semi_join_mask)."""
-    from .config import CONFIG
-
     if CONFIG.distributed != "off" and int(build.shape[0]) > 0:
         from repro.dist import dframe
 
@@ -222,9 +319,54 @@ def _hstack(
     name_map: Dict[str, str],
 ) -> TensorFrame:
     """Horizontal stack of two equal-length frames; right columns are
-    renamed per ``name_map`` (absent = dropped)."""
+    renamed per ``name_map`` (absent = dropped).
+
+    Late path: both sides' view blocks stack zero-copy — no payload
+    moves; the output is a ``RowView`` frame over every source block.
+    """
     n = left.nrows
     assert right.nrows == n, (right.nrows, n)
+    if CONFIG.late_materialization:
+        lblocks, lmat = left._view_parts()
+        rblocks, rmat = right._view_parts()
+        ofs = len(lblocks)
+        rbase = 0 if lmat is None else int(lmat.shape[0])
+        blocks = list(lblocks) + [
+            ViewBlock(
+                b.itensor,
+                b.ftensor,
+                None if b.row_id is None else rbase + b.row_id,
+            )
+            for b in rblocks
+        ]
+        if lmat is None:
+            rowmat = rmat
+        elif rmat is None:
+            rowmat = lmat
+        else:
+            rowmat = jnp.concatenate([lmat, rmat], axis=0)
+        cols: Dict[str, ColumnMeta] = dict(left.columns)
+        off: Dict[str, OffloadedColumn] = dict(left.offloaded)
+        for name, m in right.columns.items():
+            if _is_hidden(name):
+                base = name[len(VALID_PREFIX):]
+                if base not in name_map:
+                    continue
+                new = _valid_name(name_map[base])
+            else:
+                if name not in name_map:
+                    continue
+                new = name_map[name]
+            if m.kind == "obj":
+                off[new] = right.offloaded[name]
+                cols[new] = ColumnMeta(new, "obj", -1)
+            else:
+                cols[new] = dataclasses.replace(m, name=new, block=ofs + m.block)
+        out = TensorFrame._from_view(cols, off, n, blocks, rowmat)
+        # value bounds survive the gather (rows repeat, never widen)
+        left._inherit_stats(out, "bounds")
+        right._inherit_stats(out, "bounds", mapping=name_map)
+        return out
     it = (
         jnp.concatenate([left.itensor, right.itensor], axis=1)
         if right.itensor.shape[1]
@@ -236,8 +378,8 @@ def _hstack(
         else left.ftensor
     )
     iofs, fofs = left.itensor.shape[1], left.ftensor.shape[1]
-    cols: Dict[str, ColumnMeta] = dict(left.columns)
-    off: Dict[str, OffloadedColumn] = dict(left.offloaded)
+    cols = dict(left.columns)
+    off = dict(left.offloaded)
     for name, m in right.columns.items():
         if _is_hidden(name):
             base = name[len(VALID_PREFIX):]
@@ -259,17 +401,53 @@ def _hstack(
 
 
 def _vconcat_same_schema(a: TensorFrame, b: TensorFrame) -> TensorFrame:
+    """Vertical concat of two frames with identical column dicts.
+
+    Pipeline exit: both sides materialize (one fused gather per base
+    tensor each) and concatenate tensor-to-tensor; mismatched slot
+    layouts fall back to per-column stitching.
+    """
     assert list(a.columns.keys()) == list(b.columns.keys())
-    it = jnp.concatenate([a.itensor, b.itensor], axis=0)
-    ft = jnp.concatenate([a.ftensor, b.ftensor], axis=0)
-    off: Dict[str, OffloadedColumn] = {}
-    for name, oa in a.offloaded.items():
-        ob = b.offloaded[name]
-        assert oa.values is ob.values, "vconcat requires shared physical storage"
-        off[name] = OffloadedColumn(
-            oa.values, jnp.concatenate([oa.idx, ob.idx]), oa._cache
-        )
-    return TensorFrame(it, ft, dict(a.columns), off, a.nrows + b.nrows)
+    a.materialize()
+    b.materialize()
+    same_layout = all(
+        (m.kind, m.slot) == (b.columns[name].kind, b.columns[name].slot)
+        for name, m in a.columns.items()
+    )
+    if same_layout:
+        it = jnp.concatenate([a.itensor, b.itensor], axis=0)
+        ft = jnp.concatenate([a.ftensor, b.ftensor], axis=0)
+        off: Dict[str, OffloadedColumn] = {}
+        for name, oa in a.offloaded.items():
+            ob = b.offloaded[name]
+            assert oa.values is ob.values, "vconcat requires shared physical storage"
+            off[name] = OffloadedColumn(
+                oa.values, jnp.concatenate([oa.idx, ob.idx]), oa._cache
+            )
+        return TensorFrame(it, ft, dict(a.columns), off, a.nrows + b.nrows)
+    n = a.nrows + b.nrows
+    cols: Dict[str, ColumnMeta] = {}
+    off = {}
+    icols: List[jax.Array] = []
+    fcols: List[jax.Array] = []
+    for name, ma in a.columns.items():
+        mb = b.columns[name]
+        if ma.kind == "obj":
+            oa, ob = a.offloaded[name], b.offloaded[name]
+            assert oa.values is ob.values, "vconcat requires shared physical storage"
+            off[name] = OffloadedColumn(
+                oa.values, jnp.concatenate([oa.idx, ob.idx]), oa._cache
+            )
+            cols[name] = ColumnMeta(name, "obj", -1)
+        elif ma.kind == "float":
+            cols[name] = ColumnMeta(name, "float", len(fcols))
+            fcols.append(jnp.concatenate([a._raw_values(ma), b._raw_values(mb)]))
+        else:
+            cols[name] = ColumnMeta(name, ma.kind, len(icols), ma.dictionary)
+            icols.append(jnp.concatenate([a._raw_values(ma), b._raw_values(mb)]))
+    it = jnp.stack(icols, axis=1) if icols else _empty_tensor(n, INT)
+    ft = jnp.stack(fcols, axis=1) if fcols else _empty_tensor(n, float_dtype())
+    return TensorFrame(it, ft, cols, off, n)
 
 
 def _null_right_rows(right: TensorFrame, n: int) -> TensorFrame:
@@ -277,14 +455,25 @@ def _null_right_rows(right: TensorFrame, n: int) -> TensorFrame:
 
     Existing validity columns land at 0 automatically (itensor zeros);
     offloaded indexers point at physical row 0 and are masked by
-    validity downstream.
+    validity downstream.  When ``right`` is a view the null frame
+    mirrors its block structure so the metas stay valid.
     """
-    it = jnp.zeros((n, right.itensor.shape[1]), dtype=INT)
-    ft = jnp.full((n, right.ftensor.shape[1]), np.nan, dtype=right.ftensor.dtype)
     off = {
         name: OffloadedColumn(oc.values, jnp.zeros((n,), dtype=INT), oc._cache)
         for name, oc in right.offloaded.items()
     }
+    if right._view is not None:
+        blocks = [
+            ViewBlock(
+                jnp.zeros((n, b.itensor.shape[1]), dtype=INT),
+                jnp.full((n, b.ftensor.shape[1]), np.nan, dtype=b.ftensor.dtype),
+                None,
+            )
+            for b in right._view.blocks
+        ]
+        return TensorFrame._from_view(dict(right.columns), off, n, blocks, None)
+    it = jnp.zeros((n, right.itensor.shape[1]), dtype=INT)
+    ft = jnp.full((n, right.ftensor.shape[1]), np.nan, dtype=right.ftensor.dtype)
     return TensorFrame(it, ft, dict(right.columns), off, n)
 
 
@@ -310,6 +499,7 @@ def join(
     lcodes, rcodes, domain = composite_join_codes(left, right, left_on, right_on)
 
     # null keys never match: -1 on the left, -2 on the right
+    null_keys = False
     for lk in left_on:
         v = left.valid_array(lk)
         if v is not None:
@@ -317,6 +507,7 @@ def join(
     for rk in right_on:
         v = right.valid_array(rk)
         if v is not None:
+            null_keys = True
             rcodes = jnp.where(v, rcodes, np.int64(-2))
 
     if how in ("semi", "anti"):
@@ -335,8 +526,24 @@ def join(
     else:
         unique_build = False
         if algorithm in ("auto", "direct") and nb > 0:
-            m_build = int((jnp.diff(jnp.sort(rcodes)) != 0).sum()) + 1
-            unique_build = m_build == nb
+            hint = right.unique_hint(right_on)
+            if hint is not None:
+                unique_build = bool(hint)
+                STATS[
+                    "stats_unique_hits" if hint else "stats_nonunique_hits"
+                ] += 1
+            else:
+                # unknown build side: pay the sort-based test once and
+                # cache the verdict on the frame (exact distinct count
+                # of the key combination — unless null keys collapsed
+                # codes, which would under-count)
+                STATS["uniqueness_sort_tests"] += 1
+                m_build = int((jnp.diff(jnp.sort(rcodes)) != 0).sum()) + 1
+                unique_build = m_build == nb
+                if not null_keys:
+                    right.set_stats(
+                        list(right_on), unique=unique_build, distinct=m_build
+                    )
         if unique_build and algorithm != "sorted":
             matched, lrows, rrows = direct_address_rows(lcodes, rcodes, domain)
             matched_counts = matched.astype(INT)

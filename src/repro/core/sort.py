@@ -15,13 +15,8 @@ from .frame import INT, TensorFrame
 
 
 def _sort_key(frame: TensorFrame, name: str) -> jax.Array:
-    m = frame.meta(name)
-    if m.kind == "float":
-        return frame.ftensor[:, m.slot]
-    if m.kind == "obj":
-        codes, _ = frame.offloaded[name].codes()
-        return codes
-    return frame.itensor[:, m.slot]
+    # view-aware: gathers only the sort-key column from a lazy frame
+    return frame.col_values(name)
 
 
 def sort_values(
@@ -53,4 +48,4 @@ def sort_values(
     if stable:
         keys.insert(0, jnp.arange(frame.nrows, dtype=INT))
     order = jnp.lexsort(tuple(keys)).astype(INT)
-    return frame.take(order)
+    return frame.take(order, stats="permutation")

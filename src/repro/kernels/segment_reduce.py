@@ -72,3 +72,25 @@ def segment_sum_sorted_pallas(
     out = jnp.zeros((num_segments,), dtype=jnp.float32)
     out = out.at[slotids.reshape(-1)].add(partials.reshape(-1))
     return out
+
+
+def run_ranks_sorted(ids: jax.Array) -> jax.Array:
+    """Within-run rank (0-based) of each element of a *sorted* id vector.
+
+    The same run-boundary formulation the kernel above uses to rank ids
+    inside a block (``rank = cumsum(id-changes)``), turned inside out:
+    instead of the run index we want each element's offset *within* its
+    run, which is ``position - run_start`` with run starts recovered by
+    a cumulative max over boundary positions.  Fully on-device — no
+    host sync — which is what the join's sorted-probe CSR expansion
+    needs (it runs behind a single deferred total-count fetch).
+    """
+    n = ids.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), dtype=jnp.int64)
+    idx = jnp.arange(n, dtype=jnp.int64)
+    boundary = jnp.concatenate(
+        [jnp.zeros((1,), dtype=bool), ids[1:] != ids[:-1]]
+    )
+    starts = jax.lax.cummax(jnp.where(boundary, idx, 0))
+    return idx - starts

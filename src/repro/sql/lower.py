@@ -39,6 +39,7 @@ from .parser import (
     SOr,
     SAnd,
     format_expr,
+    like_prefix,
 )
 from .plan import (
     Aggregate,
@@ -207,6 +208,15 @@ def _scan_pred(c, alias: str) -> StorePred:
         return StorePred(name(c.e), "between", (const(c.lo), const(c.hi)))
     if isinstance(c, SIn):
         return StorePred(name(c.e), "in", tuple(const(v) for v in c.values))
+    if isinstance(c, SIsNull):
+        return StorePred(name(c.e), "notnull" if c.negated else "isnull")
+    if isinstance(c, SLike):
+        prefix = like_prefix(c.pattern)
+        if prefix is None or c.negated:
+            raise SqlError(
+                f"cannot push non-prefix LIKE {format_expr(c)} into a scan"
+            )
+        return StorePred(name(c.e), "like", prefix)
     raise SqlError(f"cannot push predicate {format_expr(c)} into a scan")
 
 
@@ -272,7 +282,7 @@ def lower_plan(node, frames: Dict[str, TensorFrame]) -> TensorFrame:
         # keep first-occurrence row order (stable, like the oracle's
         # seen-set scan) so a later Sort+LIMIT breaks ties identically
         rep = jnp.sort(f.groupby(cols).rep)
-        return f.take(rep).select(cols)
+        return f.take(rep, stats="subset").select(cols)
     if isinstance(node, AttachScalar):
         f = lower_plan(node.child, frames)
         sub = lower_plan(node.sub.v, frames)

@@ -46,11 +46,13 @@ from .parser import (
     SIn,
     SInterval,
     SIsNull,
+    SLike,
     SLit,
     SNot,
     SOr,
     conjoin,
     expr_columns,
+    like_prefix,
     split_conjuncts,
     transform,
     walk,
@@ -765,11 +767,14 @@ def push_scan_predicates(node, store_tables):
     """Move sargable Filter conjuncts into Scans of store-backed tables.
 
     A sargable conjunct compares one scanned column against constants
-    (``col <op> literal``, ``BETWEEN``, ``IN (literals, ...)``).  The
-    store scan applies it exactly — zone maps skip whole chunks, then a
-    host-side row filter — so the conjunct is *removed* from the plan
-    rather than duplicated.  Everything else (LIKE, arithmetic over
-    columns, OR trees) stays as a residual Filter above the scan.
+    (``col <op> literal``, ``BETWEEN``, ``IN (literals, ...)``,
+    ``IS [NOT] NULL``, ``LIKE 'prefix%'``).  The store scan applies it
+    exactly — zone maps skip whole chunks (null counts answer IS NULL,
+    the sorted dictionary reduces a LIKE prefix to a code range), then
+    a host-side row filter — so the conjunct is *removed* from the
+    plan rather than duplicated.  Everything else (general LIKE,
+    arithmetic over columns, OR trees) stays as a residual Filter
+    above the scan.
     """
     if isinstance(node, Filter):
         child = push_scan_predicates(node.child, store_tables)
@@ -826,6 +831,10 @@ def _sargable(c, scan: Scan) -> bool:
         return scan_col(c.e) and _is_scan_const(c.lo) and _is_scan_const(c.hi)
     if isinstance(c, SIn) and not c.negated:
         return scan_col(c.e) and all(_is_scan_const(v) for v in c.values)
+    if isinstance(c, SIsNull):
+        return scan_col(c.e)
+    if isinstance(c, SLike) and not c.negated:
+        return scan_col(c.e) and like_prefix(c.pattern) is not None
     return False
 
 

@@ -149,6 +149,18 @@ class SIsNull:
     negated: bool = False
 
 
+def like_prefix(pattern: str) -> Optional[str]:
+    """The literal prefix of a sargable ``LIKE 'prefix%'`` pattern, or
+    None when the pattern is not a pure prefix match (wildcards other
+    than one trailing ``%``)."""
+    if not pattern.endswith("%"):
+        return None
+    body = pattern[:-1]
+    if "%" in body or "_" in body:
+        return None
+    return body
+
+
 @dataclasses.dataclass(frozen=True)
 class SCase:
     whens: Tuple[Tuple[object, object], ...]

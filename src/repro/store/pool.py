@@ -16,12 +16,15 @@ a full equality check so a digest collision can never alias two
 different dictionaries.  Interned arrays are marked read-only; sharing
 is only safe because nobody may write through them.
 
-The pool holds strong references for the process lifetime — identity
-(`is`) comparisons stay valid for as long as any code might hold a
-code array encoded against an interned dictionary.  Long-running
-processes that churn through many distinct dictionaries should call
-``POOL.clear()`` at table-set boundaries (a bounded / weak-referenced
-pool is a ROADMAP follow-up).
+The pool is **bounded**: entries are kept in LRU order and evicted past
+``max_entries`` (default 1024 dictionaries), so a long-running process
+churning through many distinct table sets no longer accumulates strong
+references for its lifetime.  Eviction is always *safe*: code still
+holding an evicted canonical array keeps it alive through its own
+reference; a later equal dictionary simply interns to a fresh object
+and the identity fast path degrades to the content-merge slow path.
+``POOL.clear()`` still empties the pool manually; ``POOL.max_entries``
+is assignable (``None`` disables the bound).
 
 No jax imports here: the pool (like all of ``repro.store``) is host-side
 numpy and must stay importable without initializing any accelerator.
@@ -29,9 +32,12 @@ numpy and must stay importable without initializing any accelerator.
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, List, Tuple
+from collections import OrderedDict
+from typing import List, Optional, Tuple
 
 import numpy as np
+
+DEFAULT_MAX_ENTRIES = 1024
 
 
 def _digest(dictionary: np.ndarray) -> Tuple[int, bytes]:
@@ -44,12 +50,19 @@ def _digest(dictionary: np.ndarray) -> Tuple[int, bytes]:
 
 
 class StringPool:
-    """Content-addressed intern table for sorted dictionary arrays."""
+    """Content-addressed, LRU-bounded intern table for sorted
+    dictionary arrays."""
 
-    def __init__(self) -> None:
-        self._by_key: Dict[Tuple[int, bytes], List[np.ndarray]] = {}
+    def __init__(self, max_entries: Optional[int] = DEFAULT_MAX_ENTRIES) -> None:
+        # key -> collision bucket, in LRU order (oldest first)
+        self._by_key: "OrderedDict[Tuple[int, bytes], List[np.ndarray]]" = (
+            OrderedDict()
+        )
+        self._count = 0  # total interned arrays, kept O(1)
+        self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def intern(self, dictionary: np.ndarray) -> np.ndarray:
         """Return the canonical instance of ``dictionary``.
@@ -60,26 +73,42 @@ class StringPool:
         """
         dictionary = np.asarray(dictionary)
         key = _digest(dictionary)
-        bucket = self._by_key.setdefault(key, [])
-        for cand in bucket:  # digest-collision guard: verify content
-            if cand.shape == dictionary.shape and bool(
-                np.all(cand == dictionary)
-            ):
-                self.hits += 1
-                return cand
+        bucket = self._by_key.get(key)
+        if bucket is not None:
+            self._by_key.move_to_end(key)  # LRU touch
+            for cand in bucket:  # digest-collision guard: verify content
+                if cand.shape == dictionary.shape and bool(
+                    np.all(cand == dictionary)
+                ):
+                    self.hits += 1
+                    return cand
+        else:
+            bucket = self._by_key[key] = []
         canonical = dictionary.copy()
         canonical.setflags(write=False)
         bucket.append(canonical)
+        self._count += 1
         self.misses += 1
+        self._evict()
         return canonical
 
+    def _evict(self) -> None:
+        if self.max_entries is None:
+            return
+        while self._count > self.max_entries and len(self._by_key) > 1:
+            _, bucket = self._by_key.popitem(last=False)
+            self._count -= len(bucket)
+            self.evictions += len(bucket)
+
     def __len__(self) -> int:
-        return sum(len(b) for b in self._by_key.values())
+        return self._count
 
     def clear(self) -> None:
         self._by_key.clear()
+        self._count = 0
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
 
 #: The process-wide pool every store table interns through.

@@ -17,9 +17,14 @@ frame layer (``TensorFrame.from_store``) builds tensors without
 re-factorizing — the store's second job after skipping I/O.
 
 Predicates are conjuncts (implicit AND).  Supported ops:
-``= <> < <= > >=`` against a scalar, ``between`` (inclusive pair) and
-``in`` (value tuple).  Anything else stays a residual filter above the
-scan (the SQL optimizer only pushes sargable conjuncts).
+``= <> < <= > >=`` against a scalar, ``between`` (inclusive pair),
+``in`` (value tuple), ``isnull`` / ``notnull`` (float columns: NaN is
+the store's null — chunks prune on the zone-map null counts), and
+``like`` (prefix match, i.e. SQL ``LIKE 'prefix%'`` — dict columns
+reduce it to a code range against the sorted dictionary, plain string
+columns prune on the min/max string bounds).  Anything else stays a
+residual filter above the scan (the SQL optimizer only pushes sargable
+conjuncts).
 """
 from __future__ import annotations
 
@@ -38,16 +43,18 @@ class Pred:
     """One sargable conjunct: ``column <op> value``.
 
     ``op`` is one of ``= <> < <= > >=`` (value: scalar), ``between``
-    (value: inclusive ``(lo, hi)``) or ``in`` (value: tuple).  Date
-    values may be ``np.datetime64`` or int days since epoch.
+    (value: inclusive ``(lo, hi)``), ``in`` (value: tuple), ``isnull``
+    / ``notnull`` (value ignored) or ``like`` (value: the literal
+    prefix of a ``LIKE 'prefix%'`` pattern).  Date values may be
+    ``np.datetime64`` or int days since epoch.
     """
 
     column: str
     op: str
-    value: object
+    value: object = None
 
     def __post_init__(self):
-        if self.op not in _CMP_OPS + ("between", "in"):
+        if self.op not in _CMP_OPS + ("between", "in", "isnull", "notnull", "like"):
             raise ValueError(f"unknown predicate op {self.op!r}")
 
 
@@ -129,6 +136,27 @@ def _to_physical(col: Column, p: Pred):
     _NONE.  For dict columns the value becomes a code (bound)."""
     import math
 
+    if p.op in ("isnull", "notnull"):
+        # only float columns can hold nulls in the store (NaN cells)
+        if col.ctype == "float":
+            return (p.op, None)
+        return _NONE if p.op == "isnull" else _ALL
+    if p.op == "like":
+        if col.ctype != "str":
+            raise TypeError(
+                f"LIKE predicate on non-string column {col.name!r}"
+            )
+        prefix = str(p.value)
+        if col.encoding == "dict":
+            # sorted dictionary: prefix matches are one contiguous code
+            # range — one vectorized dictionary pass, zone maps then
+            # prune on code bounds like any between
+            lut = np.char.startswith(col.dictionary.astype("U"), prefix)
+            idx = np.flatnonzero(lut)
+            if idx.shape[0] == 0:
+                return _NONE
+            return ("between", (int(idx[0]), int(idx[-1])))
+        return ("like", prefix)
     int_domain = col.ctype in _INT_DOMAIN and col.encoding != "dict"
     if p.op == "between":
         lo, hi = p.value
@@ -191,6 +219,17 @@ def chunk_may_match(stats, phys) -> bool:
         return False
     lo, hi = stats.vmin, stats.vmax
     op, v = phys
+    if op == "isnull":
+        return stats.null_count > 0
+    if op == "notnull":
+        return lo is not None  # any non-null value in the chunk
+    if op == "like":
+        # prefix matches form the string interval [v, v_end); the chunk
+        # range [lo, hi] intersects it iff hi >= v and lo < v_end
+        # (lo < v_end  <=>  lo < v or lo startswith v)
+        if lo is None:
+            return False
+        return str(hi) >= v and (str(lo) < v or str(lo).startswith(v))
     if lo is None:
         # all-null chunk: nothing compares true — except <>, where NaN
         # cells match under the engine's IEEE semantics
@@ -232,6 +271,12 @@ def _prune_mask(col: Column, ph) -> np.ndarray:
             (chunk_may_match(c.stats, ph) for c in col.chunks), bool, count=n
         )
     op, v = ph
+    if op == "isnull":
+        return np.fromiter(
+            (c.stats.null_count > 0 for c in col.chunks), bool, count=n
+        )
+    if op == "notnull":
+        return ~np.isnan(mins)  # NaN bound = all-null chunk
     if op == "=":
         return (mins <= v) & (v <= maxs)
     if op == "<>":
@@ -262,6 +307,12 @@ def _prune_mask(col: Column, ph) -> np.ndarray:
 def _eval_rows(values: np.ndarray, phys) -> np.ndarray:
     """Exact row mask of one chunk's physical values."""
     op, v = phys
+    if op == "isnull":
+        return np.isnan(values.astype(np.float64))
+    if op == "notnull":
+        return ~np.isnan(values.astype(np.float64))
+    if op == "like":
+        return np.char.startswith(values.astype("U"), v)
     if op == "=":
         return values == v
     if op == "<>":

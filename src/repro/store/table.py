@@ -175,6 +175,35 @@ class Column:
             self._zones = (mins, maxs, exact)
         return self._zones
 
+    def uniqueness_from_stats(self):
+        """(unique, distinct) provable from the chunk zone maps alone.
+
+        ``unique=True`` when every chunk's non-null values are
+        internally distinct (per-chunk distinct == non-null count) and
+        the chunks' [vmin, vmax] ranges are pairwise disjoint — the
+        layout of primary-key-ish and sorted columns; the total
+        distinct count is then exact.  ``unique=False`` when some chunk
+        provably holds a duplicate.  ``(None, None)`` when the zone
+        maps cannot decide (overlapping chunk ranges).  Consumed by
+        ``TensorFrame.from_store`` to seed the frame stats cache so
+        ``join(algorithm="auto")`` skips its build-side sort test.
+        """
+        total = 0
+        spans = []
+        for c in self.chunks:
+            nn = c.n - c.stats.null_count
+            if nn == 0:
+                continue
+            if c.stats.distinct < nn:
+                return False, None
+            total += c.stats.distinct
+            spans.append((c.stats.vmin, c.stats.vmax))
+        spans.sort()
+        for (_, a_hi), (b_lo, _) in zip(spans, spans[1:]):
+            if b_lo <= a_hi:
+                return None, None  # ranges overlap: zone maps can't prove
+        return True, total
+
     def chunk_physical(self, i: int) -> np.ndarray:
         """Decoded *physical* values of chunk ``i`` (codes for dict)."""
         c = self.chunks[i]
