@@ -66,7 +66,7 @@ def main() -> None:
         "sql": lambda: bench_sql.run(sf=sf, quick=quick),
         "operators": lambda: bench_operators.run(sf=sf, quick=quick),
         "scaling": lambda: bench_scaling.run(quick=quick),
-        "compile": lambda: bench_compile.run(quick=quick),
+        "compile": lambda: bench_compile.run(sf=sf, quick=quick),
         "loading": lambda: bench_loading.run(sf=sf, quick=quick),
         "memory": lambda: bench_memory.run(sf=sf, quick=quick),
         "cores": lambda: bench_cores.run(sf=sf, quick=quick),

@@ -37,6 +37,15 @@ class EngineConfig:
     # payloads materialize once at pipeline exits.  False restores the
     # eager copy-per-op engine (benchmark baseline / debugging).
     late_materialization: bool = True
+    # Whole-plan compilation (repro.sql.compile): 'off' never compiles,
+    # 'force' compiles every supported plan regardless of size, 'auto'
+    # compiles when the scanned base tables total at least
+    # compiled_min_rows rows (small interactive queries skip the trace
+    # cost; repeated large ones amortize it through the plan cache).
+    # Plans with untraceable constructs fall back to op-by-op dispatch
+    # in every mode.
+    compiled: str = "auto"
+    compiled_min_rows: int = 1 << 15
 
 
 CONFIG = EngineConfig()

@@ -861,29 +861,52 @@ class TensorFrame:
         kind: str = "int",
         dictionary: Optional[np.ndarray] = None,
     ) -> "TensorFrame":
-        self.materialize()  # pipeline exit: appends rebuild the tensor
         values = jnp.asarray(values, dtype=INT).reshape(self.nrows, 1)
-        it = jnp.concatenate([self._itensor, values], axis=1)
         cols = dict(self.columns)
         cols.pop(name, None)
-        cols[name] = ColumnMeta(name, kind, self._itensor.shape[1], dictionary)
         off = dict(self.offloaded)
         off.pop(name, None)
-        out = TensorFrame(it, self._ftensor, cols, off, self.nrows)
+        if self._view is not None:
+            # Lazy append: the computed column is already aligned with
+            # the logical rows, so it rides along as its own identity
+            # block — the view's deferred gathers survive (a
+            # filter -> with_column -> join chain stays one gather per
+            # base table at materialize time).
+            blocks = list(self._view.blocks)
+            blocks.append(
+                ViewBlock(values, _empty_tensor(self.nrows, float_dtype()), None)
+            )
+            cols[name] = ColumnMeta(name, kind, 0, dictionary, len(blocks) - 1)
+            out = TensorFrame._from_view(
+                cols, off, self.nrows, blocks, self._view.rowmat
+            )
+        else:
+            it = jnp.concatenate([self._itensor, values], axis=1)
+            cols[name] = ColumnMeta(name, kind, self._itensor.shape[1], dictionary)
+            out = TensorFrame(it, self._ftensor, cols, off, self.nrows)
         self._inherit_stats(out, "columns")
         out._drop_stats_mentioning(name)  # the name may have been replaced
         return out
 
     def _append_float_column(self, name: str, values: jax.Array) -> "TensorFrame":
-        self.materialize()
         values = jnp.asarray(values, dtype=float_dtype()).reshape(self.nrows, 1)
-        ft = jnp.concatenate([self._ftensor, values], axis=1)
         cols = dict(self.columns)
         cols.pop(name, None)
-        cols[name] = ColumnMeta(name, "float", self._ftensor.shape[1])
         off = dict(self.offloaded)
         off.pop(name, None)
-        out = TensorFrame(self._itensor, ft, cols, off, self.nrows)
+        if self._view is not None:
+            blocks = list(self._view.blocks)
+            blocks.append(
+                ViewBlock(_empty_tensor(self.nrows, INT), values, None)
+            )
+            cols[name] = ColumnMeta(name, "float", 0, None, len(blocks) - 1)
+            out = TensorFrame._from_view(
+                cols, off, self.nrows, blocks, self._view.rowmat
+            )
+        else:
+            ft = jnp.concatenate([self._ftensor, values], axis=1)
+            cols[name] = ColumnMeta(name, "float", self._ftensor.shape[1])
+            out = TensorFrame(self._itensor, ft, cols, off, self.nrows)
         self._inherit_stats(out, "columns")
         out._drop_stats_mentioning(name)
         return out

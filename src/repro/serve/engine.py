@@ -1,14 +1,20 @@
 """Batched serving engine: prefill + decode with a slot-based
-continuous-batching scheduler.
+continuous-batching scheduler, plus a prepared-statement surface for
+serving repeated parameterized SQL queries off the whole-plan compile
+cache (``repro.sql.compile``).
 
 Requests join a fixed pool of batch slots; finished/empty slots are
 refilled between decode steps (the static-shape TPU idiom for
 continuous batching — the decode step itself never recompiles).
+The same static-shape idiom powers ``PreparedStatement``: the first
+execution traces and compiles one XLA program for the query's plan
+shape, and every later execution with different literal parameters is
+a plan-cache hit — zero retraces, one device launch per query.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 import jax
@@ -92,3 +98,36 @@ class ServeEngine:
             self.step()
             done += [r for r in requests if r.done and r not in done]
         return requests
+
+
+class PreparedStatement:
+    """A parameterized SQL query served off the whole-plan compile cache.
+
+    ``template`` is SQL text with ``{name}`` placeholders for *numeric
+    or date literals* (the parameters a serving tier varies per
+    request).  Each ``execute(**params)`` formats and re-plans the text
+    — cheap host work — and dispatches through ``sql.execute``; because
+    the compiled-plan cache keys on the plan's *structure* with
+    literals abstracted into parameter slots, every execution after the
+    first reuses one compiled XLA executable regardless of the literal
+    values.  Under ``CONFIG.compiled = 'off'`` (or for untraceable
+    plans) this degrades transparently to op-by-op dispatch.
+
+        ps = PreparedStatement(
+            "SELECT ... WHERE l_quantity < {qty}", frames)
+        out = ps.execute(qty=24)   # traces + compiles once
+        out = ps.execute(qty=25)   # cache hit, zero retraces
+    """
+
+    def __init__(self, template: str, scope: Dict):
+        from repro.sql.lower import scope_frames
+
+        self.template = template
+        self.frames = scope_frames(scope)
+        self.calls = 0
+
+    def execute(self, **params):
+        from repro import sql
+
+        self.calls += 1
+        return sql.execute(self.template.format(**params), self.frames)

@@ -65,6 +65,14 @@ def execute(query: str, scope: Dict, *, optimize: bool = True):
     plan = plan_query(query, frames, optimized=False)
     if optimize:
         plan = _optimize(plan, store_tables=store_table_names(frames))
+        from repro.core.config import CONFIG
+
+        if CONFIG.compiled != "off":
+            from . import compile as _compile
+
+            out = _compile.maybe_execute_compiled(plan, frames)
+            if out is not None:
+                return out
     else:
         plan = _decorrelate(plan)
     return lower_plan(plan, frames)

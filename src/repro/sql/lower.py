@@ -52,6 +52,7 @@ from .plan import (
     SOuter,
     SUBQUERY_MARKERS,
     Scan,
+    Shared,
     Sort,
 )
 
@@ -118,6 +119,10 @@ def _literal_value(e):
 
 def to_expr(e) -> Expr:
     """SQL expression AST -> core trait Expr."""
+    if hasattr(e, "to_core_expr"):
+        # bound plan parameters (repro.sql.compile) lower themselves:
+        # their payload is a traced scalar that must not reach lit()
+        return e.to_core_expr()
     if isinstance(e, SCol):
         return col(e.internal)
     if isinstance(e, SLit):
@@ -233,7 +238,13 @@ def _lower_substring(e: SFunc) -> Expr:
 # ----------------------------------------------------------------------
 # plan lowering
 # ----------------------------------------------------------------------
-def lower_plan(node, frames: Dict[str, TensorFrame]) -> TensorFrame:
+def lower_plan(node, frames: Dict[str, TensorFrame], _memo=None) -> TensorFrame:
+    if _memo is None:
+        _memo = {}  # Shared subplan -> TensorFrame (structural key)
+    if isinstance(node, Shared):
+        if node not in _memo:
+            _memo[node] = lower_plan(node.child, frames, _memo)
+        return _memo[node]
     if isinstance(node, Scan):
         try:
             src = frames[node.table]
@@ -257,10 +268,10 @@ def lower_plan(node, frames: Dict[str, TensorFrame]) -> TensorFrame:
             f = f.filter(to_expr(pred))
         return f
     if isinstance(node, Filter):
-        return lower_plan(node.child, frames).filter(to_expr(node.pred))
+        return lower_plan(node.child, frames, _memo).filter(to_expr(node.pred))
     if isinstance(node, Join):
-        left = lower_plan(node.left, frames)
-        right = lower_plan(node.right, frames)
+        left = lower_plan(node.left, frames, _memo)
+        right = lower_plan(node.right, frames, _memo)
         return left.join(
             right,
             left_on=list(node.left_keys),
@@ -268,24 +279,24 @@ def lower_plan(node, frames: Dict[str, TensorFrame]) -> TensorFrame:
             how=node.how,
         )
     if isinstance(node, Aggregate):
-        return _lower_aggregate(node, lower_plan(node.child, frames))
+        return _lower_aggregate(node, lower_plan(node.child, frames, _memo))
     if isinstance(node, Project):
-        return _lower_project(node, lower_plan(node.child, frames))
+        return _lower_project(node, lower_plan(node.child, frames, _memo))
     if isinstance(node, Sort):
-        f = lower_plan(node.child, frames)
+        f = lower_plan(node.child, frames, _memo)
         return f.sort_values([n for n, _ in node.keys], [a for _, a in node.keys])
     if isinstance(node, Limit):
-        return lower_plan(node.child, frames).head(node.n)
+        return lower_plan(node.child, frames, _memo).head(node.n)
     if isinstance(node, Distinct):
-        f = lower_plan(node.child, frames)
+        f = lower_plan(node.child, frames, _memo)
         cols = list(f.column_names)
         # keep first-occurrence row order (stable, like the oracle's
         # seen-set scan) so a later Sort+LIMIT breaks ties identically
         rep = jnp.sort(f.groupby(cols).rep)
         return f.take(rep, stats="subset").select(cols)
     if isinstance(node, AttachScalar):
-        f = lower_plan(node.child, frames)
-        sub = lower_plan(node.sub.v, frames)
+        f = lower_plan(node.child, frames, _memo)
+        sub = lower_plan(node.sub.v, frames, _memo)
         if sub.nrows > 1:
             raise SqlError(
                 f"scalar subquery {node.name} returned {sub.nrows} rows"

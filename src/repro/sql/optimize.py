@@ -68,6 +68,7 @@ from .plan import (
     Limit,
     Project,
     Scan,
+    Shared,
     Sort,
     SOuter,
     SubqueryExpr,
@@ -142,7 +143,7 @@ def decorrelate(plan):
                     "arguments are not supported"
                 )
         return dataclasses.replace(node, child=decorrelate(node.child))
-    if isinstance(node, (Sort, Limit, Distinct)):
+    if isinstance(node, (Sort, Limit, Distinct, Shared)):
         return dataclasses.replace(node, child=decorrelate(node.child))
     if isinstance(node, AttachScalar):
         return dataclasses.replace(
@@ -370,22 +371,28 @@ def _rewrite_exists(child, m: ExistsExpr):
     (no, ni) = nq[0]
     _check_outer_available(child, [no], "EXISTS subquery")
     ncol, mcol = f"{m.name}_n", f"{m.name}_m"
-    group = Aggregate(
-        sub,
-        tuple((i, SCol("", i)) for _, i in eq),
-        ((ncol, "nunique", SCol("", ni)), (mcol, "min", SCol("", ni))),
-    )
+
+    def make_group(inner):
+        return Aggregate(
+            inner,
+            tuple((i, SCol("", i)) for _, i in eq),
+            ((ncol, "nunique", SCol("", ni)), (mcol, "min", SCol("", ni))),
+        )
+
     if not m.negated:
         # semi join on the equality keys, then anti join against the
-        # single-value groups whose only value equals the outer column
+        # single-value groups whose only value equals the outer column.
+        # The inner relation feeds BOTH joins — wrap it in Shared so
+        # lowering evaluates it once instead of scanning twice.
+        inner = Shared(sub)
         semi = Join(
             child,
-            sub,
+            inner,
             tuple(o for o, _ in eq),
             tuple(i for _, i in eq),
             "semi",
         )
-        only_one = Filter(group, SCmp("=", SCol("", ncol), SLit(1)))
+        only_one = Filter(make_group(inner), SCmp("=", SCol("", ncol), SLit(1)))
         anti = Join(
             semi,
             only_one,
@@ -394,6 +401,7 @@ def _rewrite_exists(child, m: ExistsExpr):
             "anti",
         )
         return anti, None
+    group = make_group(sub)
     # NOT EXISTS: left join the grouped inner, keep rows with no group
     # or whose single inner value is exactly the outer column's value
     left = Join(
@@ -630,7 +638,7 @@ def fold_constants(node):
         return dataclasses.replace(
             node, left=fold_constants(node.left), right=fold_constants(node.right)
         )
-    if isinstance(node, (Sort, Limit, Distinct)):
+    if isinstance(node, (Sort, Limit, Distinct, Shared)):
         return dataclasses.replace(node, child=fold_constants(node.child))
     if isinstance(node, AttachScalar):
         return dataclasses.replace(
@@ -660,7 +668,7 @@ def push_filters(node):
         return dataclasses.replace(
             node, left=push_filters(node.left), right=push_filters(node.right)
         )
-    if isinstance(node, (Project, Aggregate, Sort, Limit, Distinct)):
+    if isinstance(node, (Project, Aggregate, Sort, Limit, Distinct, Shared)):
         return dataclasses.replace(node, child=push_filters(node.child))
     if isinstance(node, AttachScalar):
         return dataclasses.replace(
@@ -794,7 +802,7 @@ def push_scan_predicates(node, store_tables):
             left=push_scan_predicates(node.left, store_tables),
             right=push_scan_predicates(node.right, store_tables),
         )
-    if isinstance(node, (Project, Aggregate, Sort, Limit, Distinct)):
+    if isinstance(node, (Project, Aggregate, Sort, Limit, Distinct, Shared)):
         return dataclasses.replace(
             node, child=push_scan_predicates(node.child, store_tables)
         )
@@ -845,7 +853,19 @@ def prune_projections(node, required: Optional[Set[str]] = None):
     """Narrow Scans to the columns actually referenced above them.
 
     ``required=None`` means "everything" (the root, and below nodes that
-    need their child intact)."""
+    need their child intact).
+
+    Runs in two passes so ``Shared`` subplans prune consistently: the
+    first records the union of the column sets every consumer demands
+    from each Shared node, the second rewrites using those unions, so
+    equal Shared wrappers stay equal (and lowering still evaluates the
+    shared subtree once)."""
+    shared_req: dict = {}
+    _prune(node, required, shared_req, record=True)
+    return _prune(node, required, shared_req, record=False)
+
+
+def _prune(node, required: Optional[Set[str]], shared_req: dict, record: bool):
     if isinstance(node, Project):
         outputs = node.outputs
         if required is not None:
@@ -859,7 +879,7 @@ def prune_projections(node, required: Optional[Set[str]] = None):
         need = set()
         for _, e in outputs:
             need |= expr_columns(e)
-        return Project(prune_projections(node.child, need), outputs)
+        return Project(_prune(node.child, need, shared_req, record), outputs)
     if isinstance(node, Sort):
         # sort keys are consumed here even if no parent needs them
         need = (
@@ -867,34 +887,53 @@ def prune_projections(node, required: Optional[Set[str]] = None):
             else required | {n for n, _ in node.keys}
         )
         return dataclasses.replace(
-            node, child=prune_projections(node.child, need)
+            node, child=_prune(node.child, need, shared_req, record)
         )
     if isinstance(node, Limit):
         return dataclasses.replace(
-            node, child=prune_projections(node.child, required)
+            node, child=_prune(node.child, required, shared_req, record)
         )
     if isinstance(node, Distinct):
         # dedup semantics depend on every child column: keep them all
-        return Distinct(prune_projections(node.child, None))
+        return Distinct(_prune(node.child, None, shared_req, record))
+    if isinstance(node, Shared):
+        if record:
+            have = shared_req.get(node, frozenset())
+            if required is None or have is None:
+                shared_req[node] = None
+            else:
+                shared_req[node] = frozenset(have) | frozenset(required)
+            _prune(node.child, shared_req[node], shared_req, record)
+            return node
+        need = shared_req.get(node, None)
+        return Shared(_prune(node.child, need, shared_req, record))
     if isinstance(node, AttachScalar):
         need = None if required is None else required - {node.name}
         return dataclasses.replace(
             node,
-            child=prune_projections(node.child, need),
-            sub=Boxed(prune_projections(node.sub.v, None)),
+            child=_prune(node.child, need, shared_req, record),
+            sub=Boxed(_prune(node.sub.v, None, shared_req, record)),
         )
     if isinstance(node, Filter):
         need = None if required is None else required | expr_columns(node.pred)
-        return Filter(prune_projections(node.child, need), node.pred)
+        return Filter(_prune(node.child, need, shared_req, record), node.pred)
     if isinstance(node, Aggregate):
+        aggs = node.aggs
+        if required is not None:
+            # drop aggregate expressions no parent consumes — a Project
+            # that keeps half the aggregates no longer computes them all
+            # (group keys always stay: they define the grouping)
+            kept = tuple(a for a in aggs if a[0] in required)
+            if kept or not aggs:
+                aggs = kept
         need = set()
         for _, e in node.keys:
             need |= expr_columns(e)
-        for _, _, e in node.aggs:
+        for _, _, e in aggs:
             if e is not None:
                 need |= expr_columns(e)
-        return dataclasses.replace(
-            node, child=prune_projections(node.child, need)
+        return Aggregate(
+            _prune(node.child, need, shared_req, record), node.keys, aggs
         )
     if isinstance(node, Join):
         need = (
@@ -906,8 +945,8 @@ def prune_projections(node, required: Optional[Set[str]] = None):
         lneed = None if need is None else need & lcols
         rneed = None if need is None else need & rcols
         return Join(
-            prune_projections(node.left, lneed),
-            prune_projections(node.right, rneed),
+            _prune(node.left, lneed, shared_req, record),
+            _prune(node.right, rneed, shared_req, record),
             node.left_keys,
             node.right_keys,
             node.how,

@@ -123,6 +123,20 @@ class AttachScalar:
     output: str  # the subplan's output column name
 
 
+@dataclasses.dataclass(frozen=True)
+class Shared:
+    """A common subplan referenced from several places in the plan.
+
+    The optimizer wraps a subtree it reuses (e.g. the inner relation of
+    an EXISTS-with-``<>`` rewrite feeds both the semi join and the
+    grouped anti join) so lowering evaluates it once and reuses the
+    result.  Equality is structural: optimizer passes may copy the
+    wrapper, and as long as the copies stay equal the lowering memo
+    still collapses them to a single evaluation."""
+
+    child: object
+
+
 # ----------------------------------------------------------------------
 # subquery expression markers (embedded in Filter predicates)
 # ----------------------------------------------------------------------
@@ -234,7 +248,7 @@ def node_columns(node) -> set:
         return {n for n, _ in node.keys} | {n for n, _, _ in node.aggs}
     if isinstance(node, Project):
         return {n for n, _ in node.outputs}
-    if isinstance(node, (Filter, Sort, Limit, Distinct)):
+    if isinstance(node, (Filter, Sort, Limit, Distinct, Shared)):
         return node_columns(node.child)
     if isinstance(node, AttachScalar):
         return node_columns(node.child) | {node.name}
@@ -775,6 +789,10 @@ def _output_name_for(e, outputs, res, rewrite=None) -> str:
 # explain formatting
 # ----------------------------------------------------------------------
 def format_plan(node, indent: int = 0) -> str:
+    return _format_plan(node, indent, {})
+
+
+def _format_plan(node, indent: int, shared: dict) -> str:
     pad = "  " * indent
     if isinstance(node, Scan):
         cols = ", ".join(node.columns)
@@ -788,12 +806,12 @@ def format_plan(node, indent: int = 0) -> str:
     if isinstance(node, Filter):
         out = (
             f"{pad}Filter {format_expr(node.pred)}\n"
-            + format_plan(node.child, indent + 1)
+            + _format_plan(node.child, indent + 1, shared)
         )
         for m in subquery_markers(node.pred):
             out += (
                 f"\n{pad}  [{m.name}] subquery:\n"
-                + format_plan(m.plan.v, indent + 2)
+                + _format_plan(m.plan.v, indent + 2, shared)
             )
         return out
     if isinstance(node, Join):
@@ -802,9 +820,9 @@ def format_plan(node, indent: int = 0) -> str:
         )
         return (
             f"{pad}Join {node.how} on [{on}]\n"
-            + format_plan(node.left, indent + 1)
+            + _format_plan(node.left, indent + 1, shared)
             + "\n"
-            + format_plan(node.right, indent + 1)
+            + _format_plan(node.right, indent + 1, shared)
         )
     if isinstance(node, Aggregate):
         keys = ", ".join(
@@ -817,7 +835,7 @@ def format_plan(node, indent: int = 0) -> str:
         )
         return (
             f"{pad}Aggregate keys=[{keys}] aggs=[{aggs}]\n"
-            + format_plan(node.child, indent + 1)
+            + _format_plan(node.child, indent + 1, shared)
         )
     if isinstance(node, Project):
         outs = ", ".join(
@@ -827,19 +845,34 @@ def format_plan(node, indent: int = 0) -> str:
             else f"{n}={format_expr(e)}"
             for n, e in node.outputs
         )
-        return f"{pad}Project [{outs}]\n" + format_plan(node.child, indent + 1)
+        return f"{pad}Project [{outs}]\n" + _format_plan(
+            node.child, indent + 1, shared
+        )
     if isinstance(node, Sort):
         keys = ", ".join(f"{n} {'ASC' if a else 'DESC'}" for n, a in node.keys)
-        return f"{pad}Sort [{keys}]\n" + format_plan(node.child, indent + 1)
+        return f"{pad}Sort [{keys}]\n" + _format_plan(
+            node.child, indent + 1, shared
+        )
     if isinstance(node, Limit):
-        return f"{pad}Limit {node.n}\n" + format_plan(node.child, indent + 1)
+        return f"{pad}Limit {node.n}\n" + _format_plan(
+            node.child, indent + 1, shared
+        )
     if isinstance(node, Distinct):
-        return f"{pad}Distinct\n" + format_plan(node.child, indent + 1)
+        return f"{pad}Distinct\n" + _format_plan(node.child, indent + 1, shared)
+    if isinstance(node, Shared):
+        sid = shared.get(node)
+        if sid is not None:
+            return f"{pad}Shared #{sid} (reused, emitted once)"
+        sid = len(shared) + 1
+        shared[node] = sid
+        return f"{pad}Shared #{sid}\n" + _format_plan(
+            node.child, indent + 1, shared
+        )
     if isinstance(node, AttachScalar):
         return (
             f"{pad}AttachScalar {node.name} = scalar of [{node.output}]\n"
-            + format_plan(node.child, indent + 1)
+            + _format_plan(node.child, indent + 1, shared)
             + f"\n{pad}  [{node.name}] subquery:\n"
-            + format_plan(node.sub.v, indent + 2)
+            + _format_plan(node.sub.v, indent + 2, shared)
         )
     raise TypeError(f"unknown plan node {type(node).__name__}")

@@ -109,6 +109,29 @@ def test_view_composition_filter_sort_head():
     _assert_same(_decoded(lazy), _decoded(eager))
 
 
+def test_with_column_keeps_view_lazy():
+    """Appending a computed column onto a RowView must not force the
+    whole frame to materialize (ISSUE 6 satellite): the new payload
+    lands in its own identity block and the view composes on."""
+    from repro.core.expr import col, lit
+
+    f = _full_frame(n=60)
+    v = f.filter(f.col_values("i") >= 3)
+    assert v.is_view
+    v2 = v.with_column("i2", col("i") * lit(2))
+    assert v2.is_view  # the append did not materialize the view
+    v3 = v2.filter(v2.col_values("k") < 5)
+    assert v3.is_view
+    CONFIG.late_materialization = False
+    try:
+        e = f.filter(f.col_values("i") >= 3)
+        e2 = e.with_column("i2", col("i") * lit(2))
+        e3 = e2.filter(e2.col_values("k") < 5)
+    finally:
+        CONFIG.late_materialization = True
+    _assert_same(_decoded(v3), _decoded(e3))
+
+
 @pytest.mark.parametrize("how", ["inner", "left"])
 def test_join_chain_threads_views(how):
     f = _full_frame(n=50, seed=1, tag=1)

@@ -1,0 +1,273 @@
+"""Whole-plan compilation tests (ISSUE 6).
+
+Differential: every TPC-H query must produce identical results whether
+the optimized plan is dispatched op-by-op or compiled into a single
+jitted XLA program (``CONFIG.compiled = 'force'``).  Plan-cache: the
+compiled executable is keyed on (parameterized plan structure, dtypes,
+bucketed capacities), so a repeated query — or the same query with
+different numeric/date literals, or same-bucket input sizes — must
+reuse the executable with zero retraces, while dtype or bucket changes
+must recompile.  Property tests drive random fixed-capacity
+filter/join pipelines against the eager engine.
+"""
+import numpy as np
+import pytest
+
+from repro import sql
+from repro.core import oracle as orc
+from repro.core.config import CONFIG
+from repro.core.frame import TensorFrame
+from repro.queries.tpch_sql import SCALAR_SQL, TPCH_SQL, sql_text
+from repro.sql import compile as plan_compile
+
+SF = 0.002  # must match the shared tpch_small fixture (conftest.py)
+
+# Same slow lane as test_sql.py: each of these compiles a multi-join
+# XLA program (seconds); the fast rest keep tier-1 snappy.
+SLOW_SQL = {
+    "q2", "q3", "q4", "q5", "q7", "q8", "q9", "q10",
+    "q11", "q13", "q15", "q16", "q17", "q18", "q20", "q21",
+}
+
+QNAMES = sorted(TPCH_SQL, key=lambda s: int(s[1:]))
+
+
+@pytest.fixture()
+def compiled_mode():
+    """force-compile inside the test, restore defaults after."""
+    plan_compile.reset_stats()
+    plan_compile.clear_cache()
+    CONFIG.compiled = "force"
+    try:
+        yield plan_compile.STATS
+    finally:
+        CONFIG.compiled = "auto"
+        CONFIG.compiled_min_rows = 1 << 15
+
+
+def _run_both(text, frames):
+    CONFIG.compiled = "off"
+    ref = sql.execute(text, frames)
+    CONFIG.compiled = "force"
+    out = sql.execute(text, frames)
+    return out, ref
+
+
+def _assert_match(qname, out, ref):
+    if qname in SCALAR_SQL:
+        godf, rodf = orc.frame_to_odf(out), orc.frame_to_odf(ref)
+        for name in rodf:
+            assert godf[name][0] == pytest.approx(rodf[name][0], rel=1e-8)
+        return
+    orc.assert_odf_equal(
+        orc.frame_to_odf(out), orc.frame_to_odf(ref), sort=True, rtol=1e-8
+    )
+
+
+def _params():
+    return [
+        pytest.param(q, marks=pytest.mark.slow) if q in SLOW_SQL else q
+        for q in QNAMES
+    ]
+
+
+@pytest.mark.parametrize("qname", _params())
+def test_tpch_compiled_matches_dispatch(tpch_small, compiled_mode, qname):
+    _, frames = tpch_small
+    out, ref = _run_both(sql_text(qname, SF), frames)
+    _assert_match(qname, out, ref)
+    # the whole query really ran as one compiled program
+    assert compiled_mode["compiles"] == 1
+    assert compiled_mode["fallbacks"] == 0
+
+
+def test_tpch_auto_mode_compiles_large_inputs(tpch_small, compiled_mode):
+    """auto = compile iff the scanned base tables clear the size gate;
+    either way the results match dispatch."""
+    _, frames = tpch_small
+    CONFIG.compiled = "off"
+    ref = sql.execute(sql_text("q1", SF), frames)
+
+    CONFIG.compiled = "auto"
+    CONFIG.compiled_min_rows = 1 << 60  # unreachable -> dispatch
+    out = sql.execute(sql_text("q1", SF), frames)
+    _assert_match("q1", out, ref)
+    assert compiled_mode["skipped_small"] == 1
+    assert compiled_mode["compiles"] == 0
+
+    CONFIG.compiled_min_rows = 0  # everything clears the gate
+    out = sql.execute(sql_text("q1", SF), frames)
+    _assert_match("q1", out, ref)
+    assert compiled_mode["compiles"] == 1
+
+
+# ----------------------------------------------------------------------
+# plan cache keying
+# ----------------------------------------------------------------------
+def _frame(n, float_b=False, seed=0):
+    rng = np.random.default_rng(seed)
+    b = rng.random(n) * 10 if float_b else rng.integers(0, 50, n)
+    return TensorFrame.from_arrays(
+        {"a": rng.integers(0, 9, n), "b": b, "w": rng.random(n)}
+    )
+
+
+Q = "SELECT a, SUM(w) AS s, COUNT(*) AS c FROM t WHERE b > {k} GROUP BY a"
+
+
+def test_repeat_query_compiles_once(compiled_mode):
+    frames = {"t": _frame(100)}
+    r1 = sql.execute(Q.format(k=10), frames)
+    r2 = sql.execute(Q.format(k=10), frames)
+    assert compiled_mode["compiles"] == 1
+    assert compiled_mode["misses"] == 1
+    assert compiled_mode["hits"] == 1
+    orc.assert_odf_equal(
+        orc.frame_to_odf(r1), orc.frame_to_odf(r2), sort=True
+    )
+
+
+def test_changed_literal_hits_cache(compiled_mode):
+    """The serving case: same plan shape, different parameter — zero
+    retraces, the literal travels as a runtime input."""
+    frames = {"t": _frame(100)}
+    sql.execute(Q.format(k=10), frames)
+    for k in (20, 30, 5, 45):
+        out = sql.execute(Q.format(k=k), frames)
+        CONFIG.compiled = "off"
+        ref = sql.execute(Q.format(k=k), frames)
+        CONFIG.compiled = "force"
+        orc.assert_odf_equal(
+            orc.frame_to_odf(out), orc.frame_to_odf(ref), sort=True,
+            rtol=1e-8,
+        )
+    assert compiled_mode["compiles"] == 1
+    assert compiled_mode["hits"] == 4
+
+
+def test_same_bucket_size_hits_cache(compiled_mode):
+    # 100 and 120 rows both pad to the 128 bucket -> one executable
+    sql.execute(Q.format(k=10), {"t": _frame(100)})
+    sql.execute(Q.format(k=10), {"t": _frame(120, seed=1)})
+    assert compiled_mode["compiles"] == 1
+    assert compiled_mode["hits"] == 1
+
+
+def test_bucket_change_recompiles(compiled_mode):
+    sql.execute(Q.format(k=10), {"t": _frame(100)})
+    sql.execute(Q.format(k=10), {"t": _frame(200)})  # bucket 128 -> 256
+    assert compiled_mode["compiles"] == 2
+    assert compiled_mode["hits"] == 0
+
+
+def test_dtype_change_recompiles(compiled_mode):
+    sql.execute(Q.format(k=10), {"t": _frame(100)})
+    sql.execute(Q.format(k=10), {"t": _frame(100, float_b=True)})
+    assert compiled_mode["compiles"] == 2
+    assert compiled_mode["hits"] == 0
+
+
+def test_stats_record_per_plan_timings(compiled_mode):
+    sql.execute(Q.format(k=10), {"t": _frame(100)})
+    sql.execute(Q.format(k=11), {"t": _frame(100)})
+    (rec,) = compiled_mode["plans"].values()
+    assert rec["calls"] == 2
+    assert rec["trace_s"] > 0 and rec["compile_s"] > 0
+    assert rec["exec_s"] > 0 and rec["tables"] == ["t"]
+
+
+def test_unsupported_plan_falls_back_and_is_negative_cached(compiled_mode):
+    # many-to-many self join: neither side is unique on the key
+    f = TensorFrame.from_arrays(
+        {"k": np.array([1, 1, 2, 2]), "v": np.arange(4.0)}
+    )
+    q = "SELECT a.v AS x, b.v AS y FROM t a, t b WHERE a.k = b.k"
+    CONFIG.compiled = "off"
+    ref = sql.execute(q, {"t": f})
+    CONFIG.compiled = "force"
+    out = sql.execute(q, {"t": f})
+    orc.assert_odf_equal(
+        orc.frame_to_odf(out), orc.frame_to_odf(ref), sort=True
+    )
+    assert compiled_mode["fallbacks"] == 1
+    assert compiled_mode["compiles"] == 0
+    sql.execute(q, {"t": f})  # negative-cached: no second trace attempt
+    assert compiled_mode["fallbacks"] == 2
+
+
+def test_prepared_statement_zero_recompiles(compiled_mode):
+    from repro.serve.engine import PreparedStatement
+
+    ps = PreparedStatement(Q, {"t": _frame(100)})
+    ps.execute(k=10)
+    for k in (15, 25, 35):
+        ps.execute(k=k)
+    assert ps.calls == 4
+    assert compiled_mode["compiles"] == 1
+    assert compiled_mode["hits"] == 3
+
+
+# ----------------------------------------------------------------------
+# fixed-capacity semantics vs the eager engine
+# ----------------------------------------------------------------------
+def _pipeline_scope(rng, n):
+    t = TensorFrame.from_arrays(
+        {
+            "k": rng.integers(0, 12, n),
+            "x": rng.integers(-20, 20, n),
+            "y": rng.random(n) * 100,
+        }
+    )
+    u = TensorFrame.from_arrays(
+        {"k": np.arange(12), "w": rng.random(12)}  # unique build side
+    )
+    return {"t": t, "u": u}
+
+
+PIPE = (
+    "SELECT t.k AS k, SUM(t.y + u.w) AS s, COUNT(*) AS c, MIN(t.x) AS m "
+    "FROM t, u WHERE t.k = u.k AND t.x > {thr} GROUP BY t.k"
+)
+
+
+def test_random_filter_join_agg_matches_eager(compiled_mode):
+    rng = np.random.default_rng(7)
+    for trial in range(8):
+        scope = _pipeline_scope(rng, int(rng.integers(1, 90)))
+        thr = int(rng.integers(-25, 25))  # sometimes filters out all rows
+        out, ref = _run_both(PIPE.format(thr=thr), scope)
+        orc.assert_odf_equal(
+            orc.frame_to_odf(out), orc.frame_to_odf(ref), sort=True,
+            rtol=1e-8,
+        )
+    assert compiled_mode["fallbacks"] == 0
+
+
+def test_hypothesis_filter_join_agg_matches_eager(compiled_mode):
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(
+        xs=st.lists(st.integers(-20, 20), min_size=1, max_size=60),
+        thr=st.integers(-25, 25),
+        seed=st.integers(0, 2**16),
+    )
+    def check(xs, thr, seed):
+        rng = np.random.default_rng(seed)
+        n = len(xs)
+        scope = _pipeline_scope(rng, n)
+        scope["t"] = TensorFrame.from_arrays(
+            {
+                "k": rng.integers(0, 12, n),
+                "x": np.asarray(xs, dtype=np.int64),
+                "y": rng.random(n) * 100,
+            }
+        )
+        out, ref = _run_both(PIPE.format(thr=thr), scope)
+        orc.assert_odf_equal(
+            orc.frame_to_odf(out), orc.frame_to_odf(ref), sort=True,
+            rtol=1e-8,
+        )
+
+    check()

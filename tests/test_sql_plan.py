@@ -366,6 +366,22 @@ def test_projection_pruning_narrows_scans(scope):
     assert scans["dept"].columns == ("name", "loc")  # budget pruned
 
 
+def test_projection_pruning_drops_unused_aggregates(scope):
+    # the derived table computes three aggregates but the outer query
+    # reads only one: the others (and the column feeding them) must be
+    # pruned from the Aggregate and the Scan
+    plan = sql.plan_query(
+        "SELECT dd, n FROM (SELECT dept AS dd, COUNT(*) AS n, "
+        "SUM(sal) AS s, MIN(sal) AS m FROM emp GROUP BY dept) t",
+        scope,
+    )
+    aggs = [n for _, n in _tree(plan) if isinstance(n, Aggregate)]
+    assert len(aggs) == 1
+    assert [a[1] for a in aggs[0].aggs] == ["size"]  # SUM/MIN pruned
+    scans = {n.table: n for _, n in _tree(plan) if isinstance(n, Scan)}
+    assert "sal" not in scans["emp"].columns
+
+
 def test_unoptimized_scans_keep_all_columns(scope):
     plan = sql.plan_query(
         "SELECT loc, SUM(sal) AS s FROM emp, dept WHERE dept = name GROUP BY loc",
@@ -693,6 +709,11 @@ def test_exists_with_neq_residual(scope):
     opt = sql.explain(q, scope).split("== optimized plan ==")[1]
     assert "Join semi on" in opt and "Join anti on" in opt
     assert "NUNIQUE" in opt
+    # the inner relation feeds BOTH the semi join and the grouped anti
+    # join through one Shared node: it is scanned once, not twice
+    assert "Shared #1" in opt
+    assert "(reused, emitted once)" in opt
+    assert opt.count("Scan emp e2") == 1
 
 
 def test_derived_table_in_from(scope):
