@@ -51,6 +51,7 @@ def main() -> None:
         bench_operators,
         bench_roofline,
         bench_scaling,
+        bench_serve,
         bench_sql,
         bench_store,
         bench_tpch,
@@ -67,6 +68,7 @@ def main() -> None:
         "operators": lambda: bench_operators.run(sf=sf, quick=quick),
         "scaling": lambda: bench_scaling.run(quick=quick),
         "compile": lambda: bench_compile.run(sf=sf, quick=quick),
+        "serve": lambda: bench_serve.run(sf=sf, quick=quick),
         "loading": lambda: bench_loading.run(sf=sf, quick=quick),
         "memory": lambda: bench_memory.run(sf=sf, quick=quick),
         "cores": lambda: bench_cores.run(sf=sf, quick=quick),

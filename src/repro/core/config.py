@@ -46,6 +46,17 @@ class EngineConfig:
     # in every mode.
     compiled: str = "auto"
     compiled_min_rows: int = 1 << 15
+    # Concurrent SQL serving (repro.serve.sql): the admission queue
+    # drains up to serve_max_batch requests per micro-batch, waiting at
+    # most serve_batch_window_ms after the first request for stragglers
+    # to accumulate.  serve_shared_scans=False disables the shared
+    # zone-map scan pass (every query scans its store tables alone —
+    # the benchmark baseline for the sharing win); serve_coalesce=False
+    # disables duplicate-query coalescing within a batch.
+    serve_max_batch: int = 32
+    serve_batch_window_ms: float = 2.0
+    serve_shared_scans: bool = True
+    serve_coalesce: bool = True
 
 
 CONFIG = EngineConfig()

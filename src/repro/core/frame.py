@@ -540,6 +540,7 @@ class TensorFrame:
         *,
         card_threshold: Optional[float] = None,
         encode: Optional[Dict[str, str]] = None,
+        result=None,
     ) -> "TensorFrame":
         """Materialize a frame from a ``repro.store`` chunked table.
 
@@ -556,10 +557,17 @@ class TensorFrame:
         prove unique (or duplicate-bearing) seed the frame's stats
         cache, so downstream ``join(algorithm="auto")`` picks its
         build strategy without sorting the build side.
+
+        ``result`` short-circuits the scan with a precomputed
+        ``store.ScanResult`` for exactly these columns/predicates —
+        the serving layer's shared-scan path (``store.shared_scan``)
+        answers many concurrent scans in one pass and materializes
+        each frame from its own result here.
         """
         from repro import store as _store
 
-        result = _store.scan(table, columns, list(predicates))
+        if result is None:
+            result = _store.scan(table, columns, list(predicates))
         threshold = (
             CONFIG.card_threshold if card_threshold is None else card_threshold
         )

@@ -1,2 +1,29 @@
-"""Serving runtime: batched decode with KV caches / recurrent state,
-plus a simple continuous-batching request scheduler."""
+"""Serving runtime.
+
+Two tiers live here:
+
+- ``engine`` — batched LM-style decode with KV caches / recurrent
+  state, plus a simple continuous-batching request scheduler;
+- ``sql``   — the concurrent SQL serving layer: ``Executor`` sessions
+  over store tables and frames, per-session ``jax.vmap``-lowered UDFs,
+  prepared statements riding the whole-plan compile cache, and an
+  admission queue that micro-batches compatible concurrent queries
+  (shared zone-map store scans, duplicate coalescing).
+
+``STATS`` (``serve.stats``) counts what the SQL batcher did —
+admissions, batches, shared-scan groups, coalesced duplicates,
+compiled-plan cache hits — with latency percentiles.
+"""
+from .stats import STATS, ServeStats
+
+__all__ = ["STATS", "ServeStats", "Executor", "Prepared", "Session"]
+
+
+def __getattr__(name):
+    # Executor pulls in the SQL stack (and, on first execution, jax);
+    # keep ``import repro.serve`` light for engine-only users
+    if name in ("Executor", "Prepared", "Session"):
+        from . import sql as _sql
+
+        return getattr(_sql, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,144 @@
+"""Admission control: a queue that forms micro-batches of SQL requests.
+
+Clients (any thread) submit work and get a ``concurrent.futures.Future``
+back.  A single worker drains the queue, waits out a short straggler
+window (``CONFIG.serve_batch_window_ms``) so concurrent submitters land
+in the same batch, caps the batch at ``CONFIG.serve_max_batch``, and
+hands the whole group to the executor's batch runner.  One worker
+serializes engine entry — the jax dispatch path is protected by the
+GIL anyway — so the concurrency win comes from *work sharing across
+the batch* (shared store scans, coalesced duplicates, compiled-plan
+cache adjacency), not from parallel kernels.
+
+``auto_start=False`` keeps the worker off so tests can stage a precise
+set of requests and run exactly one batch with ``drain_once()``.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, List, Optional
+
+from repro.core.config import CONFIG
+
+__all__ = ["AdmissionQueue"]
+
+
+class _Closed:
+    pass
+
+
+_CLOSED = _Closed()
+
+
+class AdmissionQueue:
+    """Single-worker micro-batching queue.
+
+    ``run_batch(requests)`` receives the drained list and must resolve
+    every request's future (it gets the full objects the executor
+    enqueued; this class only groups and times them).
+    """
+
+    def __init__(
+        self,
+        run_batch: Callable[[List], None],
+        *,
+        auto_start: bool = True,
+        name: str = "repro-serve",
+    ) -> None:
+        self._run_batch = run_batch
+        self._q: "queue.Queue" = queue.Queue()
+        self._closed = False
+        self._lock = threading.Lock()
+        self._worker: Optional[threading.Thread] = None
+        if auto_start:
+            self.start(name=name)
+
+    # -- client side ----------------------------------------------------
+    def submit(self, request) -> Future:
+        """Enqueue ``request`` (must carry a ``future`` attribute)."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("admission queue is closed")
+            self._q.put(request)
+        from .stats import STATS
+
+        STATS.bump(admitted=1)
+        return request.future
+
+    # -- worker side ----------------------------------------------------
+    def _drain(self, block: bool) -> List:
+        """Pull one micro-batch: first item (optionally blocking), then
+        whatever lands inside the straggler window, up to the cap."""
+        batch: List = []
+        try:
+            first = self._q.get(block=block, timeout=0.2 if block else None)
+        except queue.Empty:
+            return batch
+        if first is _CLOSED:
+            raise StopIteration
+        batch.append(first)
+        cap = max(1, int(CONFIG.serve_max_batch))
+        deadline = time.monotonic() + CONFIG.serve_batch_window_ms / 1e3
+        while len(batch) < cap:
+            remaining = deadline - time.monotonic()
+            try:
+                item = self._q.get(
+                    block=remaining > 0, timeout=max(remaining, 0) or None
+                )
+            except queue.Empty:
+                break
+            if item is _CLOSED:
+                self._q.put(_CLOSED)  # leave the sentinel for the loop
+                break
+            batch.append(item)
+        return batch
+
+    def drain_once(self) -> int:
+        """Synchronously run one micro-batch from whatever is queued.
+        Test/bench hook (requires ``auto_start=False``).  Returns the
+        batch size."""
+        batch = self._drain(block=False)
+        if batch:
+            self._run_batch(batch)
+        return len(batch)
+
+    def _loop(self) -> None:
+        while True:
+            try:
+                batch = self._drain(block=True)
+            except StopIteration:
+                return
+            if batch:
+                self._run_batch(batch)
+
+    def start(self, name: str = "repro-serve") -> None:
+        with self._lock:
+            if self._worker is not None or self._closed:
+                return
+            self._worker = threading.Thread(
+                target=self._loop, name=name, daemon=True
+            )
+            self._worker.start()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            worker = self._worker
+        self._q.put(_CLOSED)
+        if worker is not None:
+            worker.join(timeout=30)
+        # fail anything that raced past the closed check
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if item is not _CLOSED and not item.future.done():
+                item.future.set_exception(
+                    RuntimeError("admission queue closed")
+                )

@@ -1,0 +1,330 @@
+"""Concurrent SQL serving: sessions, prepared statements, micro-batches.
+
+``Executor`` is the framequery-style entry point: a scope of tables
+(TensorFrames, ``repro.store`` chunked tables, or raw dict-of-numpy),
+``execute``/``submit`` for queries, ``add_function`` for scalar UDFs
+(lowered through ``jax.vmap``), ``prepare`` for parameterized
+statements, and ``session()`` for isolated per-client UDF registries
+over the shared scope.
+
+All execution funnels through one ``AdmissionQueue`` worker.  Queries
+submitted concurrently land in the same micro-batch and share work:
+
+- **shared store scans** — every store-backed Scan in the batch is
+  grouped by ``(table, columns, predicates)``; each table with two or
+  more participating scans is answered by *one*
+  ``store.shared_scan`` pass (chunk decodes and predicate row-masks
+  computed once), and the per-query plans consume the pre-materialized
+  frames through ``lower_plan``'s scan cache;
+- **coalescing** — textually identical queries under the same UDF
+  environment execute once and share the result frame;
+- **plan-cache adjacency** — batch members are dispatched grouped by
+  parameterized plan shape, so prepared-statement traffic with varying
+  literals runs as consecutive zero-retrace compiled-cache hits.
+
+Results come back through ``concurrent.futures.Future``; ``execute``
+is ``submit().result()``.  ``serve.STATS`` counts what the batcher
+actually did.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future
+from typing import Callable, Dict, List
+
+from repro.core.config import CONFIG
+
+from .admission import AdmissionQueue
+from .stats import STATS
+
+__all__ = ["Executor", "Prepared", "Session"]
+
+
+class _Request:
+    __slots__ = (
+        "text",
+        "udfs",
+        "prepared",
+        "future",
+        "t_submit",
+        "plan",
+        "scan_keys",
+        "shape_key",
+    )
+
+    def __init__(self, text: str, udfs: Dict, prepared: bool) -> None:
+        self.text = text
+        self.udfs = udfs
+        self.prepared = prepared
+        self.future: Future = Future()
+        self.t_submit = time.perf_counter()
+        self.plan = None
+        self.scan_keys: List[tuple] = []
+        self.shape_key = text
+
+
+class Prepared:
+    """A parameterized statement bound to an executor or session.
+
+    ``{name}`` placeholders are formatted per call; the formatted text
+    re-plans (cheap host work — optimizer constant folding makes plan
+    *structure* depend on literal values, so substituting into a saved
+    plan would be unsafe) and rides the compiled-plan cache, which
+    abstracts literals into parameter slots: after the first call,
+    every parameter set reuses one XLA executable."""
+
+    def __init__(self, owner, template: str) -> None:
+        self._owner = owner
+        self.template = template
+        self.calls = 0
+
+    def submit(self, **params) -> Future:
+        self.calls += 1
+        return self._owner._submit(
+            self.template.format(**params), prepared=True
+        )
+
+    def execute(self, **params):
+        return self.submit(**params).result()
+
+
+class Session:
+    """Per-client view of an executor: shared tables, isolated UDFs."""
+
+    def __init__(self, executor: "Executor") -> None:
+        self._executor = executor
+        self._udfs: Dict[str, object] = {}
+
+    def add_function(self, name: str, fn: Callable, *, returns: str = "num"):
+        from repro.sql.udf import Udf
+
+        u = Udf(name, fn, returns=returns)
+        self._udfs[u.name] = u
+        return u
+
+    def _active(self) -> Dict:
+        # session registrations shadow executor-level ones
+        return {**self._executor._udfs, **self._udfs}
+
+    def _submit(self, text: str, prepared: bool = False) -> Future:
+        return self._executor._enqueue(text, self._active(), prepared)
+
+    def submit(self, query: str) -> Future:
+        return self._submit(query)
+
+    def execute(self, query: str):
+        return self._submit(query).result()
+
+    def prepare(self, template: str) -> Prepared:
+        return Prepared(self, template)
+
+
+class Executor:
+    """Serve SQL queries over a fixed scope, batching concurrent work.
+
+    ``auto_start=False`` leaves the admission worker off; tests then
+    stage submissions and run exactly one micro-batch with
+    ``drain_once()``.
+    """
+
+    def __init__(self, scope: Dict, *, auto_start: bool = True) -> None:
+        from repro.sql.lower import scope_frames
+
+        self._frames = scope_frames(scope)
+        self._udfs: Dict[str, object] = {}
+        self._queue = AdmissionQueue(self._run_batch, auto_start=auto_start)
+
+    # -- scope / registry -----------------------------------------------
+    def update(self, **tables) -> None:
+        """Add or replace scope entries (copy-on-write: in-flight
+        batches keep the scope they were planned against)."""
+        from repro.sql.lower import scope_frames
+
+        self._frames = {**self._frames, **scope_frames(tables)}
+
+    def add_function(self, name: str, fn: Callable, *, returns: str = "num"):
+        """Register a scalar python UDF, visible to every session."""
+        from repro.sql.udf import Udf
+
+        u = Udf(name, fn, returns=returns)
+        self._udfs[u.name] = u
+        return u
+
+    def session(self) -> Session:
+        return Session(self)
+
+    # -- submission ------------------------------------------------------
+    def _enqueue(self, text: str, udfs: Dict, prepared: bool) -> Future:
+        req = _Request(text, udfs, prepared)
+        return self._queue.submit(req)
+
+    def _submit(self, text: str, prepared: bool = False) -> Future:
+        return self._enqueue(text, dict(self._udfs), prepared)
+
+    def submit(self, query: str) -> Future:
+        return self._submit(query)
+
+    def execute(self, query: str):
+        return self._submit(query).result()
+
+    def prepare(self, template: str) -> Prepared:
+        return Prepared(self, template)
+
+    def drain_once(self) -> int:
+        """Run one micro-batch synchronously (``auto_start=False``)."""
+        return self._queue.drain_once()
+
+    def close(self) -> None:
+        self._queue.close()
+
+    def __enter__(self) -> "Executor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- batch execution (admission worker thread) -----------------------
+    def _run_batch(self, batch: List[_Request]) -> None:
+        from repro.sql import compile as _compile
+
+        frames = self._frames  # one snapshot for the whole batch
+        groups = self._coalesce(batch)
+        live = self._plan_batch(groups, frames)
+        scan_cache = self._share_scans(live, frames)
+
+        STATS.bump(batches=1)
+        if len(batch) >= 2:
+            STATS.bump(batched_queries=len(batch))
+
+        # dispatch grouped by parameterized plan shape: same-shape
+        # members run back-to-back as compiled-cache hits
+        live.sort(key=lambda g: g[0].shape_key)
+        hits_before = _compile.STATS["hits"]
+        for group in live:
+            self._run_group(group, frames, scan_cache)
+        with_hits = _compile.STATS["hits"] - hits_before
+        if with_hits > 0:
+            STATS.bump(plan_cache_hits=with_hits)
+
+    def _coalesce(self, batch: List[_Request]) -> List[List[_Request]]:
+        """Group identical (text, UDF environment) requests: each group
+        parses, plans, and executes once, sharing one result frame."""
+        if not CONFIG.serve_coalesce:
+            return [[req] for req in batch]
+        groups: Dict[tuple, List[_Request]] = {}
+        for req in batch:
+            ckey = (
+                req.text,
+                tuple(sorted((n, id(u)) for n, u in req.udfs.items())),
+            )
+            groups.setdefault(ckey, []).append(req)
+        for members in groups.values():
+            if len(members) > 1:
+                STATS.bump(coalesced=len(members) - 1)
+        return list(groups.values())
+
+    def _plan_batch(
+        self, groups: List[List[_Request]], frames: Dict
+    ) -> List[List[_Request]]:
+        """Plan each group's representative; planning failures resolve
+        every member of that group."""
+        from repro import sql
+        from repro.sql import compile as _compile
+        from repro.sql.lower import scan_cache_key
+        from repro.sql.plan import walk_scans
+        from repro.sql.udf import udf_scope
+        from repro.store import Table as StoreTable
+
+        live: List[List[_Request]] = []
+        for group in groups:
+            req = group[0]
+            try:
+                with udf_scope(req.udfs):
+                    req.plan = sql.plan_query(
+                        req.text, frames, optimized=True
+                    )
+                for node in walk_scans(req.plan):
+                    if isinstance(frames.get(node.table), StoreTable):
+                        req.scan_keys.append(scan_cache_key(node))
+                try:
+                    req.shape_key = repr(_compile.parameterize(req.plan)[0])
+                except Exception:
+                    req.shape_key = req.text
+            except Exception as e:  # parse/plan error -> the caller(s)
+                STATS.bump(errors=len(group))
+                for member in group:
+                    member.future.set_exception(e)
+                continue
+            live.append(group)
+        return live
+
+    def _share_scans(
+        self, live: List[List[_Request]], frames: Dict
+    ) -> Dict:
+        """One ``store.shared_scan`` pass per table that two or more
+        executed queries scan; returns the lower-layer scan cache."""
+        from repro import store
+        from repro.core import TensorFrame
+
+        scan_cache: Dict[tuple, object] = {}
+        if not CONFIG.serve_shared_scans:
+            return scan_cache
+
+        by_table: Dict[str, Dict[tuple, int]] = {}
+        for group in live:
+            for key in group[0].scan_keys:
+                by_table.setdefault(key[0], {})
+                by_table[key[0]][key] = by_table[key[0]].get(key, 0) + 1
+
+        for tname, keys in by_table.items():
+            participants = sum(keys.values())
+            if participants < 2:
+                continue  # nothing to share for this table
+            table = frames[tname]
+            specs = list(keys)  # unique (table, cols, preds) identities
+            try:
+                results = store.shared_scan(
+                    table,
+                    [(list(k[1]), list(k[2])) for k in specs],
+                )
+                for k, res in zip(specs, results):
+                    scan_cache[k] = TensorFrame.from_store(
+                        table, list(k[1]), list(k[2]), result=res
+                    )
+            except Exception:
+                continue  # fall back to per-query scans
+            STATS.bump(
+                shared_scan_groups=1, shared_scan_queries=participants
+            )
+        return scan_cache
+
+    def _run_group(
+        self, group: List[_Request], frames: Dict, scan_cache: Dict
+    ) -> None:
+        from repro import sql
+        from repro.sql.udf import udf_scope
+
+        req = group[0]
+        cache = (
+            scan_cache
+            if scan_cache and any(k in scan_cache for k in req.scan_keys)
+            else None
+        )
+        try:
+            with udf_scope(req.udfs):
+                out = sql.execute_plan(req.plan, frames, scan_cache=cache)
+        except Exception as e:
+            STATS.bump(errors=len(group))
+            for member in group:
+                member.future.set_exception(e)
+            return
+        if req.udfs:
+            STATS.bump(udf_queries=1)
+        for member in group:
+            if member.prepared:
+                STATS.bump(prepared=1)
+            self._resolve(member, out)
+
+    def _resolve(self, req: _Request, out) -> None:
+        STATS.record_latency(time.perf_counter() - req.t_submit)
+        req.future.set_result(out)

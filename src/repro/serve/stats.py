@@ -1,0 +1,87 @@
+"""Serving observability: lock-guarded counters + latency reservoir.
+
+One process-wide ``STATS`` object mirrors ``repro.sql.compile.STATS``
+for the serving tier: how many queries were admitted, how they were
+grouped into micro-batches, how often batching paid off (shared store
+scans, coalesced duplicates, compiled-plan cache hits), and end-to-end
+latency percentiles from a bounded reservoir.  Every mutation happens
+under one lock — the admission worker and arbitrary client threads
+both write here.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List
+
+__all__ = ["STATS", "ServeStats"]
+
+_RESERVOIR = 4096
+
+
+def _fresh() -> Dict[str, int]:
+    return {
+        "admitted": 0,  # queries accepted into the queue
+        "batches": 0,  # micro-batches executed
+        "batched_queries": 0,  # queries that shared a batch with >=1 other
+        "shared_scan_groups": 0,  # store-scan groups answered by one pass
+        "shared_scan_queries": 0,  # queries that rode a shared scan
+        "plan_cache_hits": 0,  # compiled-plan cache hits during serving
+        "coalesced": 0,  # duplicate queries answered by one execution
+        "prepared": 0,  # executions through a Prepared statement
+        "udf_queries": 0,  # executions under a non-empty UDF registry
+        "errors": 0,  # queries resolved with an exception
+    }
+
+
+class ServeStats:
+    """Counters + latency reservoir for the serving layer."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counts = _fresh()
+        self._lat: List[float] = []  # seconds, bounded reservoir
+
+    def bump(self, **deltas: int) -> None:
+        with self._lock:
+            for k, d in deltas.items():
+                self._counts[k] += d
+
+    def record_latency(self, seconds: float) -> None:
+        with self._lock:
+            if len(self._lat) >= _RESERVOIR:
+                # drop the oldest half; percentiles stay recent-biased
+                del self._lat[: _RESERVOIR // 2]
+            self._lat.append(float(seconds))
+
+    def percentiles(self) -> Dict[str, float]:
+        """p50/p90/p99 end-to-end latency in milliseconds."""
+        with self._lock:
+            lat = sorted(self._lat)
+        if not lat:
+            return {"p50_ms": 0.0, "p90_ms": 0.0, "p99_ms": 0.0}
+
+        def q(p: float) -> float:
+            i = min(len(lat) - 1, int(p * (len(lat) - 1) + 0.5))
+            return lat[i] * 1e3
+
+        return {"p50_ms": q(0.50), "p90_ms": q(0.90), "p99_ms": q(0.99)}
+
+    def snapshot(self) -> Dict:
+        with self._lock:
+            out = dict(self._counts)
+            n = len(self._lat)
+        out["latencies_recorded"] = n
+        out.update(self.percentiles())
+        return out
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counts = _fresh()
+            self._lat = []
+
+    def __getitem__(self, key: str) -> int:
+        with self._lock:
+            return self._counts[key]
+
+
+STATS = ServeStats()

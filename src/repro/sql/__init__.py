@@ -29,6 +29,7 @@ from .lower import lower_plan, scope_frames, store_table_names
 __all__ = [
     "SqlError",
     "execute",
+    "execute_plan",
     "explain",
     "parse",
     "plan_query",
@@ -65,17 +66,29 @@ def execute(query: str, scope: Dict, *, optimize: bool = True):
     plan = plan_query(query, frames, optimized=False)
     if optimize:
         plan = _optimize(plan, store_tables=store_table_names(frames))
-        from repro.core.config import CONFIG
-
-        if CONFIG.compiled != "off":
-            from . import compile as _compile
-
-            out = _compile.maybe_execute_compiled(plan, frames)
-            if out is not None:
-                return out
-    else:
-        plan = _decorrelate(plan)
+        return execute_plan(plan, frames)
+    plan = _decorrelate(plan)
     return lower_plan(plan, frames)
+
+
+def execute_plan(plan, frames: Dict, *, scan_cache=None):
+    """Execute an already-optimized plan against resolved frames.
+
+    The serving layer plans a whole micro-batch first (to group scans),
+    then executes each member through here.  ``scan_cache`` maps
+    ``lower.scan_cache_key`` -> pre-materialized TensorFrame from a
+    shared store scan; the compiled whole-plan path is skipped when a
+    cache is supplied (it performs its own scans).
+    """
+    from repro.core.config import CONFIG
+
+    if CONFIG.compiled != "off" and not scan_cache:
+        from . import compile as _compile
+
+        out = _compile.maybe_execute_compiled(plan, frames)
+        if out is not None:
+            return out
+    return lower_plan(plan, frames, scan_cache=scan_cache)
 
 
 def explain(query: str, scope: Dict) -> str:

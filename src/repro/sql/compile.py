@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import time
 import warnings
 import weakref
@@ -81,8 +82,10 @@ from .plan import (
     Shared,
     Sort,
     node_columns,
+    walk_scans,
 )
 from .lower import to_expr
+from .udf import active_udfs, plan_uses_udf
 
 __all__ = [
     "STATS",
@@ -122,15 +125,27 @@ STATS = _fresh_stats()
 _CACHE: "OrderedDict[str, _Entry]" = OrderedDict()
 _NEGATIVE: Dict[str, str] = {}  # fingerprint -> unsupported reason
 
+# Concurrency (the serving layer calls in from many threads): _LOCK
+# guards every shared structure here — _CACHE / _NEGATIVE / STATS /
+# _PREP — while _TRACE_LOCKS holds one lock per in-flight fingerprint
+# so two threads first-compiling the *same* plan serialize (one traces,
+# the other reuses the entry) without blocking compiles of *different*
+# plans.  XLA executables are safe to invoke concurrently.
+_LOCK = threading.RLock()
+_TRACE_LOCKS: Dict[str, threading.Lock] = {}
+
 
 def reset_stats() -> None:
-    STATS.clear()
-    STATS.update(_fresh_stats())
+    with _LOCK:
+        STATS.clear()
+        STATS.update(_fresh_stats())
 
 
 def clear_cache() -> None:
-    _CACHE.clear()
-    _NEGATIVE.clear()
+    with _LOCK:
+        _CACHE.clear()
+        _NEGATIVE.clear()
+        _TRACE_LOCKS.clear()
 
 
 def _pow2(n: int) -> int:
@@ -325,6 +340,11 @@ _PREP: "weakref.WeakKeyDictionary[TensorFrame, _PrepTable]" = (
 
 
 def _prep_table(src: TensorFrame) -> _PrepTable:
+    with _LOCK:
+        return _prep_table_locked(src)
+
+
+def _prep_table_locked(src: TensorFrame) -> _PrepTable:
     got = _PREP.get(src)
     if got is not None:
         return got
@@ -342,6 +362,11 @@ def _prep_table(src: TensorFrame) -> _PrepTable:
 
 
 def _ensure_unique(prep: _PrepTable, cols: Tuple[str, ...]) -> bool:
+    with _LOCK:
+        return _ensure_unique_locked(prep, cols)
+
+
+def _ensure_unique_locked(prep: _PrepTable, cols: Tuple[str, ...]) -> bool:
     key = tuple(sorted(cols))
     if key in prep.combos:
         return prep.combos[key]
@@ -453,23 +478,6 @@ def _collect_unique_requests(node, reqs: Dict[str, set]):
     child = getattr(node, "child", None)
     if child is not None:
         _collect_unique_requests(child, reqs)
-
-
-def _plan_scans(node, out: List[Scan]):
-    if isinstance(node, Scan):
-        out.append(node)
-        return
-    if isinstance(node, Join):
-        _plan_scans(node.left, out)
-        _plan_scans(node.right, out)
-        return
-    if isinstance(node, AttachScalar):
-        _plan_scans(node.child, out)
-        _plan_scans(node.sub.v, out)
-        return
-    child = getattr(node, "child", None)
-    if child is not None:
-        _plan_scans(child, out)
 
 
 # ----------------------------------------------------------------------
@@ -1565,6 +1573,50 @@ def _compile_entry(fpr, pplan, preps, order, kinds, args):
     )
 
 
+def _maybe_compile(fpr, pplan, preps, tables, kinds, args):
+    """Resolve a cache miss: compile ``fpr``, or reuse the entry a
+    racing thread produced while we waited on the trace lock.  The
+    caller holds the per-fingerprint lock.  Returns None on fallback."""
+    with _LOCK:
+        entry = _CACHE.get(fpr)
+        if entry is not None:
+            STATS["hits"] += 1
+            _CACHE.move_to_end(fpr)
+            return entry
+        if fpr in _NEGATIVE:
+            STATS["fallbacks"] += 1
+            return None
+        STATS["misses"] += 1
+    try:
+        entry = _compile_entry(fpr, pplan, preps, tables, kinds, args)
+    except _FALLBACK_ERRORS as e:
+        with _LOCK:
+            _NEGATIVE[fpr] = f"{type(e).__name__}: {e}"
+            _TRACE_LOCKS.pop(fpr, None)
+            STATS["fallbacks"] += 1
+        return None
+    with _LOCK:
+        STATS["compiles"] += 1
+        _CACHE[fpr] = entry
+        _TRACE_LOCKS.pop(fpr, None)
+        while len(_CACHE) > CACHE_CAPACITY:
+            _CACHE.popitem(last=False)
+            STATS["evictions"] += 1
+        rec = STATS["plans"].setdefault(
+            entry.digest,
+            {
+                "tables": tables,
+                "trace_s": 0.0,
+                "compile_s": 0.0,
+                "exec_s": 0.0,
+                "calls": 0,
+            },
+        )
+        rec["trace_s"] += entry.trace_s
+        rec["compile_s"] += entry.compile_s
+    return entry
+
+
 _FALLBACK_ERRORS = (
     Unsupported,
     SqlError,
@@ -1581,23 +1633,32 @@ def maybe_execute_compiled(plan, frames) -> Optional[TensorFrame]:
     mode = CONFIG.compiled
     if mode == "off":
         return None
-    scans: List[Scan] = []
-    _plan_scans(plan, scans)
+    scans: List[Scan] = list(walk_scans(plan))
     if not scans:
         return None
     tables = sorted({s.table for s in scans})
     for s in scans:
         if s.predicates:
-            STATS["fallbacks"] += 1
+            with _LOCK:
+                STATS["fallbacks"] += 1
             return None
     for t in tables:
         if not isinstance(frames.get(t), TensorFrame):
-            STATS["fallbacks"] += 1
+            with _LOCK:
+                STATS["fallbacks"] += 1
             return None
+    udfs = active_udfs()
+    if udfs and plan_uses_udf(plan, frozenset(udfs)):
+        # the fingerprint keys on plan structure; it cannot capture the
+        # python closure behind a session UDF -> op-by-op dispatch
+        with _LOCK:
+            STATS["fallbacks"] += 1
+        return None
     if mode != "force":
         total = sum(frames[t].nrows for t in tables)
         if total < CONFIG.compiled_min_rows:
-            STATS["skipped_small"] += 1
+            with _LOCK:
+                STATS["skipped_small"] += 1
             return None
 
     preps = {t: _prep_table(frames[t]) for t in tables}
@@ -1611,7 +1672,8 @@ def maybe_execute_compiled(plan, frames) -> Optional[TensorFrame]:
     try:
         pplan, values = parameterize(plan)
     except Unsupported:
-        STATS["fallbacks"] += 1
+        with _LOCK:
+            STATS["fallbacks"] += 1
         return None
     kinds = [k for k, _ in values]
     fpr = "|".join(
@@ -1621,44 +1683,30 @@ def maybe_execute_compiled(plan, frames) -> Optional[TensorFrame]:
             *(_table_sig(t, preps[t]) for t in tables),
         ]
     )
-    if fpr in _NEGATIVE:
-        STATS["fallbacks"] += 1
-        return None
+    with _LOCK:
+        if fpr in _NEGATIVE:
+            STATS["fallbacks"] += 1
+            return None
+        entry = _CACHE.get(fpr)
+        if entry is not None:
+            STATS["hits"] += 1
+            _CACHE.move_to_end(fpr)
+            tlock = None
+        else:
+            # one lock per in-flight fingerprint: concurrent first
+            # compiles of the same plan serialize, distinct plans don't
+            tlock = _TRACE_LOCKS.setdefault(fpr, threading.Lock())
 
     slots, n_i, n_f = _param_slots(kinds)
     args = _build_args(preps, tables, values, slots, n_i, n_f)
 
-    entry = _CACHE.get(fpr)
     if entry is None:
-        STATS["misses"] += 1
-        try:
-            entry = _compile_entry(fpr, pplan, preps, tables, kinds, args)
-        except _FALLBACK_ERRORS as e:
-            _NEGATIVE[fpr] = f"{type(e).__name__}: {e}"
-            STATS["fallbacks"] += 1
+        with tlock:
+            entry = _maybe_compile(fpr, pplan, preps, tables, kinds, args)
+        if entry is None:
             return None
-        STATS["compiles"] += 1
-        _CACHE[fpr] = entry
-        while len(_CACHE) > CACHE_CAPACITY:
-            _CACHE.popitem(last=False)
-            STATS["evictions"] += 1
-        rec = STATS["plans"].setdefault(
-            entry.digest,
-            {
-                "tables": tables,
-                "trace_s": 0.0,
-                "compile_s": 0.0,
-                "exec_s": 0.0,
-                "calls": 0,
-            },
-        )
-        rec["trace_s"] += entry.trace_s
-        rec["compile_s"] += entry.compile_s
         # tracing consumed (donated) the padded inputs; rebuild them
         args = _build_args(preps, tables, values, slots, n_i, n_f)
-    else:
-        STATS["hits"] += 1
-        _CACHE.move_to_end(fpr)
 
     t0 = time.perf_counter()
     with warnings.catch_warnings():
@@ -1667,9 +1715,10 @@ def maybe_execute_compiled(plan, frames) -> Optional[TensorFrame]:
         it, ft, n_out = entry.compiled(*args)
     n = int(n_out)
     t1 = time.perf_counter()
-    rec = STATS["plans"].get(entry.digest)
-    if rec is not None:
-        rec["exec_s"] += t1 - t0
-        rec["calls"] += 1
+    with _LOCK:
+        rec = STATS["plans"].get(entry.digest)
+        if rec is not None:
+            rec["exec_s"] += t1 - t0
+            rec["calls"] += 1
     cols = {k: dataclasses.replace(m) for k, m in entry.columns.items()}
     return TensorFrame(it[:n], ft[:n], cols, {}, n)

@@ -87,6 +87,23 @@ def store_table_names(scope: Dict) -> frozenset:
     )
 
 
+def _active_udfs():
+    from .udf import active_udfs
+
+    return active_udfs()
+
+
+def scan_cache_key(node) -> tuple:
+    """Hashable identity of a store-backed Scan's physical read:
+    (table, sorted projection, physical predicates).  Alias-agnostic —
+    two queries scanning the same table through different aliases with
+    equal predicates share one cache entry.  The serving layer builds
+    shared-scan results under these keys; ``lower_plan`` consumes them
+    through its ``scan_cache``."""
+    preds = tuple(_scan_pred(c, node.alias) for c in node.predicates)
+    return (node.table, tuple(sorted(node.columns)), preds)
+
+
 # ----------------------------------------------------------------------
 # expression translation
 # ----------------------------------------------------------------------
@@ -174,6 +191,11 @@ def to_expr(e) -> Expr:
             return _lower_substring(e)
         if e.name in _SCALAR_FNS and len(e.args) == 1:
             return getattr(to_expr(e.args[0]), e.name)()
+        udf = _active_udfs().get(e.name)
+        if udf is not None:
+            from .udf import UdfCall
+
+            return UdfCall(udf, tuple(to_expr(a) for a in e.args))
         raise SqlError(f"unsupported function {e.name.upper()}")
     if isinstance(e, SUBQUERY_MARKERS):
         raise SqlError(
@@ -238,12 +260,14 @@ def _lower_substring(e: SFunc) -> Expr:
 # ----------------------------------------------------------------------
 # plan lowering
 # ----------------------------------------------------------------------
-def lower_plan(node, frames: Dict[str, TensorFrame], _memo=None) -> TensorFrame:
+def lower_plan(
+    node, frames: Dict[str, TensorFrame], _memo=None, scan_cache=None
+) -> TensorFrame:
     if _memo is None:
         _memo = {}  # Shared subplan -> TensorFrame (structural key)
     if isinstance(node, Shared):
         if node not in _memo:
-            _memo[node] = lower_plan(node.child, frames, _memo)
+            _memo[node] = lower_plan(node.child, frames, _memo, scan_cache)
         return _memo[node]
     if isinstance(node, Scan):
         try:
@@ -254,8 +278,14 @@ def lower_plan(node, frames: Dict[str, TensorFrame], _memo=None) -> TensorFrame:
                 f"{sorted(frames)}"
             ) from None
         if isinstance(src, StoreTable):
-            preds = [_scan_pred(c, node.alias) for c in node.predicates]
-            f = TensorFrame.from_store(src, list(node.columns), preds)
+            f = scan_cache.get(scan_cache_key(node)) if scan_cache else None
+            if f is None:
+                preds = [_scan_pred(c, node.alias) for c in node.predicates]
+                f = TensorFrame.from_store(src, list(node.columns), preds)
+            else:
+                # shared-scan result: materialized once per micro-batch
+                # by repro.serve, projected down to this Scan's columns
+                f = f.select(list(node.columns))
             return f.rename({c: f"{node.alias}.{c}" for c in node.columns})
         f = src.select(list(node.columns))
         f = f.rename({c: f"{node.alias}.{c}" for c in node.columns})
@@ -268,10 +298,10 @@ def lower_plan(node, frames: Dict[str, TensorFrame], _memo=None) -> TensorFrame:
             f = f.filter(to_expr(pred))
         return f
     if isinstance(node, Filter):
-        return lower_plan(node.child, frames, _memo).filter(to_expr(node.pred))
+        return lower_plan(node.child, frames, _memo, scan_cache).filter(to_expr(node.pred))
     if isinstance(node, Join):
-        left = lower_plan(node.left, frames, _memo)
-        right = lower_plan(node.right, frames, _memo)
+        left = lower_plan(node.left, frames, _memo, scan_cache)
+        right = lower_plan(node.right, frames, _memo, scan_cache)
         return left.join(
             right,
             left_on=list(node.left_keys),
@@ -279,24 +309,24 @@ def lower_plan(node, frames: Dict[str, TensorFrame], _memo=None) -> TensorFrame:
             how=node.how,
         )
     if isinstance(node, Aggregate):
-        return _lower_aggregate(node, lower_plan(node.child, frames, _memo))
+        return _lower_aggregate(node, lower_plan(node.child, frames, _memo, scan_cache))
     if isinstance(node, Project):
-        return _lower_project(node, lower_plan(node.child, frames, _memo))
+        return _lower_project(node, lower_plan(node.child, frames, _memo, scan_cache))
     if isinstance(node, Sort):
-        f = lower_plan(node.child, frames, _memo)
+        f = lower_plan(node.child, frames, _memo, scan_cache)
         return f.sort_values([n for n, _ in node.keys], [a for _, a in node.keys])
     if isinstance(node, Limit):
-        return lower_plan(node.child, frames, _memo).head(node.n)
+        return lower_plan(node.child, frames, _memo, scan_cache).head(node.n)
     if isinstance(node, Distinct):
-        f = lower_plan(node.child, frames, _memo)
+        f = lower_plan(node.child, frames, _memo, scan_cache)
         cols = list(f.column_names)
         # keep first-occurrence row order (stable, like the oracle's
         # seen-set scan) so a later Sort+LIMIT breaks ties identically
         rep = jnp.sort(f.groupby(cols).rep)
         return f.take(rep, stats="subset").select(cols)
     if isinstance(node, AttachScalar):
-        f = lower_plan(node.child, frames, _memo)
-        sub = lower_plan(node.sub.v, frames, _memo)
+        f = lower_plan(node.child, frames, _memo, scan_cache)
+        sub = lower_plan(node.sub.v, frames, _memo, scan_cache)
         if sub.nrows > 1:
             raise SqlError(
                 f"scalar subquery {node.name} returned {sub.nrows} rows"

@@ -236,6 +236,24 @@ def iter_plan_exprs(node):
             yield from iter_plan_exprs(c)
 
 
+def walk_scans(node):
+    """Yield every Scan in a plan tree, including the subplans boxed
+    inside AttachScalar markers (post-decorrelation plans keep scalar
+    subqueries there).  Consumers: the compiled path's base-table
+    discovery and the serving layer's shared-scan grouping."""
+    if isinstance(node, Scan):
+        yield node
+        return
+    if isinstance(node, AttachScalar):
+        yield from walk_scans(node.child)
+        yield from walk_scans(node.sub.v)
+        return
+    for attr in ("child", "left", "right"):
+        c = getattr(node, attr, None)
+        if c is not None:
+            yield from walk_scans(c)
+
+
 def node_columns(node) -> set:
     """Internal column names produced by a plan node."""
     if isinstance(node, Scan):
@@ -334,11 +352,15 @@ class _Resolver:
         if isinstance(n, SFunc) and not (
             n.name in AGG_FUNCS or n.name in SCALAR_FUNCS
         ):
-            raise SqlError(
-                f"unknown function {n.name.upper()!r}; supported aggregates: "
-                f"{[f.upper() for f in AGG_FUNCS]}, scalar functions: "
-                f"{[f.upper() for f in SCALAR_FUNCS]}"
-            )
+            from .udf import active_udfs
+
+            if n.name not in active_udfs():
+                raise SqlError(
+                    f"unknown function {n.name.upper()!r}; supported "
+                    f"aggregates: {[f.upper() for f in AGG_FUNCS]}, scalar "
+                    f"functions: {[f.upper() for f in SCALAR_FUNCS]}, "
+                    f"registered UDFs: {sorted(active_udfs())}"
+                )
         return n
 
     def resolve(self, e):

@@ -30,7 +30,14 @@ from .table import (
     Table,
     compute_stats,
 )
-from .scan import MaterializedColumn, Pred, ScanResult, chunk_may_match, scan
+from .scan import (
+    MaterializedColumn,
+    Pred,
+    ScanResult,
+    chunk_may_match,
+    scan,
+    shared_scan,
+)
 from .format import (
     MAGIC_V2,
     is_v2,
@@ -58,6 +65,7 @@ __all__ = [
     "ScanResult",
     "chunk_may_match",
     "scan",
+    "shared_scan",
     "MAGIC_V2",
     "is_v2",
     "open_store",

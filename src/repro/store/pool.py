@@ -26,12 +26,19 @@ and the identity fast path degrades to the content-merge slow path.
 ``POOL.clear()`` still empties the pool manually; ``POOL.max_entries``
 is assignable (``None`` disables the bound).
 
+The pool is **thread-safe**: a serving tier interns dictionaries from
+many sessions concurrently (ISSUE 7), so lookup/insert/eviction run
+under one mutex.  Interning is a short host-side critical section —
+digesting happens outside the lock; only the bucket probe, insert and
+LRU eviction are serialized.
+
 No jax imports here: the pool (like all of ``repro.store``) is host-side
 numpy and must stay importable without initializing any accelerator.
 """
 from __future__ import annotations
 
 import hashlib
+import threading
 from collections import OrderedDict
 from typing import List, Optional, Tuple
 
@@ -59,6 +66,7 @@ class StringPool:
             OrderedDict()
         )
         self._count = 0  # total interned arrays, kept O(1)
+        self._lock = threading.Lock()
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
@@ -69,27 +77,28 @@ class StringPool:
 
         Equal-content calls return the *same object* (``is``-identical),
         so identity checks downstream replace content comparisons.  The
-        canonical array is read-only.
+        canonical array is read-only.  Safe to call from any thread.
         """
         dictionary = np.asarray(dictionary)
-        key = _digest(dictionary)
-        bucket = self._by_key.get(key)
-        if bucket is not None:
-            self._by_key.move_to_end(key)  # LRU touch
-            for cand in bucket:  # digest-collision guard: verify content
-                if cand.shape == dictionary.shape and bool(
-                    np.all(cand == dictionary)
-                ):
-                    self.hits += 1
-                    return cand
-        else:
-            bucket = self._by_key[key] = []
-        canonical = dictionary.copy()
-        canonical.setflags(write=False)
-        bucket.append(canonical)
-        self._count += 1
-        self.misses += 1
-        self._evict()
+        key = _digest(dictionary)  # hash outside the lock
+        with self._lock:
+            bucket = self._by_key.get(key)
+            if bucket is not None:
+                self._by_key.move_to_end(key)  # LRU touch
+                for cand in bucket:  # digest-collision guard: verify content
+                    if cand.shape == dictionary.shape and bool(
+                        np.all(cand == dictionary)
+                    ):
+                        self.hits += 1
+                        return cand
+            else:
+                bucket = self._by_key[key] = []
+            canonical = dictionary.copy()
+            canonical.setflags(write=False)
+            bucket.append(canonical)
+            self._count += 1
+            self.misses += 1
+            self._evict()
         return canonical
 
     def _evict(self) -> None:
@@ -104,11 +113,12 @@ class StringPool:
         return self._count
 
     def clear(self) -> None:
-        self._by_key.clear()
-        self._count = 0
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        with self._lock:
+            self._by_key.clear()
+            self._count = 0
+            self.hits = 0
+            self.misses = 0
+            self.evictions = 0
 
 
 #: The process-wide pool every store table interns through.

@@ -411,3 +411,134 @@ def scan(
         chunks_skipped=n_chunks - len(survivors),
         rows_scanned=rows_scanned,
     )
+
+
+# ----------------------------------------------------------------------
+# shared multi-predicate scan (serving micro-batches)
+# ----------------------------------------------------------------------
+def shared_scan(
+    table: Table,
+    requests: Sequence[Tuple[Optional[Sequence[str]], Sequence[Pred]]],
+) -> List[ScanResult]:
+    """One zone-map pass answering many predicated scans of ``table``.
+
+    ``requests`` is a sequence of ``(columns, predicates)`` pairs — the
+    arguments ``scan`` takes, one per concurrent query.  Semantics per
+    request are identical to calling ``scan`` (same pruning, same exact
+    row filters, same accounting), but the pass over the table is
+    shared:
+
+    * each chunk's physical values are decoded **once** (rle runs
+      expanded once, lazy chunks loaded once) no matter how many
+      requests touch it;
+    * identical physical conjuncts across requests share their exact
+      row masks (16 dashboards asking ``ts >= today`` evaluate the
+      comparison once per chunk, not 16 times);
+    * zone-map pruning stays per-request, so each request still skips
+      the chunks its own predicates disprove.
+
+    This is the serving layer's admission-batching primitive (ISSUE 7):
+    many sargable predicates against one store table collapse into one
+    shared scan pass.
+    """
+    n_chunks = table.n_chunks
+    normed = []  # (proj, [(col, ph)], per-request chunk keep mask)
+    for columns, predicates in requests:
+        proj = list(columns) if columns is not None else table.column_names
+        for name in proj:
+            table.column(name)  # raises with a helpful message
+        phys_preds: List[Tuple[Column, object]] = []
+        trivially_empty = False
+        for p in predicates:
+            col = table.column(p.column)
+            ph = _to_physical(col, p)
+            if ph is _ALL:
+                continue
+            if ph is _NONE:
+                trivially_empty = True
+                continue
+            phys_preds.append((col, ph))
+        if trivially_empty:
+            keep = np.zeros(n_chunks, dtype=bool)
+        elif phys_preds:
+            keep = np.ones(n_chunks, dtype=bool)
+            for col, ph in phys_preds:
+                keep &= _prune_mask(col, ph)
+        else:
+            keep = np.ones(n_chunks, dtype=bool)
+        normed.append((proj, phys_preds, keep))
+
+    # chunks any request materializes, per column (projection + filter)
+    union = np.zeros(n_chunks, dtype=bool)
+    for _, _, keep in normed:
+        union |= keep
+    if bool(union.all()):
+        # nothing pruned anywhere: prefer one sequential bulk read per
+        # column over per-chunk seeks (mirrors the single-scan path)
+        needed = set()
+        for proj, phys_preds, _ in normed:
+            needed.update(proj)
+            needed.update(col.name for col, _ in phys_preds)
+        for name in needed:
+            table.columns[name].ensure_loaded()
+
+    values_cache: Dict[Tuple[int, int], np.ndarray] = {}
+
+    def chunk_values(col: Column, i: int) -> np.ndarray:
+        key = (id(col), i)
+        got = values_cache.get(key)
+        if got is None:
+            got = values_cache[key] = col.chunk_physical(i)
+        return got
+
+    # exact row masks shared across requests carrying the same conjunct
+    mask_cache: Dict[Tuple[int, int, object], np.ndarray] = {}
+
+    def pred_mask(col: Column, i: int, ph) -> np.ndarray:
+        try:
+            key = (id(col), i, ph)
+            got = mask_cache.get(key)
+        except TypeError:  # unhashable predicate value: evaluate fresh
+            return _eval_rows(chunk_values(col, i), ph)
+        if got is None:
+            got = mask_cache[key] = _eval_rows(chunk_values(col, i), ph)
+        return got
+
+    any_col = next(iter(table.columns.values()), None)
+    results: List[ScanResult] = []
+    for proj, phys_preds, keep in normed:
+        survivors = np.nonzero(keep)[0].tolist()
+        parts: Dict[str, List[np.ndarray]] = {name: [] for name in proj}
+        rows_scanned = 0
+        nrows = 0
+        for i in survivors:
+            mask = None
+            for col, ph in phys_preds:
+                m = pred_mask(col, i, ph)
+                mask = m if mask is None else (mask & m)
+            if mask is not None and bool(mask.all()):
+                mask = None  # whole chunk passes: skip the fancy-index copy
+            chunk_n = any_col.chunks[i].n if any_col is not None else 0
+            rows_scanned += chunk_n
+            nrows += chunk_n if mask is None else int(mask.sum())
+            for name in proj:
+                part = chunk_values(table.columns[name], i)
+                parts[name].append(part if mask is None else part[mask])
+        out: Dict[str, MaterializedColumn] = {}
+        for name in proj:
+            col = table.columns[name]
+            if parts[name]:
+                values = np.concatenate(parts[name])
+            else:
+                values = _empty_physical(col.ctype, col.encoding)
+            out[name] = MaterializedColumn(col.ctype, values, col.dictionary)
+        results.append(
+            ScanResult(
+                nrows=nrows,
+                columns=out,
+                chunks_total=n_chunks,
+                chunks_skipped=n_chunks - len(survivors),
+                rows_scanned=rows_scanned,
+            )
+        )
+    return results

@@ -12,7 +12,7 @@ import pytest
 
 _X64_PREFIXES = (
     "test_core", "test_tpch", "test_tpcds", "test_sql", "test_dist",
-    "test_store", "test_io",
+    "test_store", "test_io", "test_serve",
 )
 
 

@@ -1,0 +1,421 @@
+"""Concurrent SQL serving tests (ISSUE 7).
+
+Correctness of the ``repro.serve`` Executor/Session surface (scope,
+UDFs, prepared statements), determinism of micro-batching (staged
+batches with ``auto_start=False``), thread-safety regressions for the
+compiled-plan cache and the interned string pool, and the serving
+property: N concurrent sessions issuing randomized parameterized TPC-H
+queries produce results identical to serial execution while the
+admission queue actually batches and shares scans.
+
+``REPRO_SERVE_STRESS=1`` (the CI stress lane) widens the thread pools
+and iteration counts; the tests themselves never skip.
+"""
+import os
+import random
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro import serve, sql, store
+from repro.core import oracle as orc
+from repro.core.config import CONFIG
+from repro.core.frame import TensorFrame
+from repro.serve.stats import STATS
+from repro.sql import compile as plan_compile
+
+STRESS = os.environ.get("REPRO_SERVE_STRESS") == "1"
+THREADS = 8 if STRESS else 4
+ROUNDS = 4 if STRESS else 2
+
+
+@pytest.fixture(autouse=True)
+def _fresh_serve_stats():
+    STATS.reset()
+    yield
+
+
+@pytest.fixture()
+def small_store():
+    """A store-backed table with rle-friendly clustered values."""
+    rng = np.random.default_rng(7)
+    n = 4000
+    return store.Table.from_arrays(
+        {
+            "g": np.repeat(rng.integers(0, 40, n // 50), 50),
+            "k": np.sort(rng.integers(0, 500, n)),
+            "v": rng.random(n),
+        },
+        chunk_rows=256,
+    )
+
+
+def _assert_same(out, ref):
+    orc.assert_odf_equal(
+        orc.frame_to_odf(out), orc.frame_to_odf(ref), sort=True, rtol=1e-8
+    )
+
+
+# ----------------------------------------------------------------------
+# executor surface
+# ----------------------------------------------------------------------
+def test_executor_over_frames_and_store(small_store):
+    frame = TensorFrame.from_arrays(
+        {"a": np.arange(10), "b": np.arange(10) * 0.5}
+    )
+    with serve.Executor({"t": small_store, "f": frame}) as ex:
+        out = ex.execute("SELECT g, SUM(v) AS s FROM t WHERE k < 200 GROUP BY g")
+        ref = sql.execute(
+            "SELECT g, SUM(v) AS s FROM t WHERE k < 200 GROUP BY g",
+            {"t": small_store},
+        )
+        _assert_same(out, ref)
+        out2 = ex.execute("SELECT a, b FROM f WHERE a >= 5")
+        assert out2.nrows == 5
+    assert STATS["admitted"] == 2
+
+
+def test_executor_scope_update(small_store):
+    with serve.Executor({"t": small_store}) as ex:
+        ex.update(u={"x": np.array([1, 2, 3])})
+        out = ex.execute("SELECT COUNT(*) AS c FROM u WHERE x > 1")
+        assert int(np.asarray(out.column("c"))[0]) == 2
+
+
+def test_executor_bad_query_raises(small_store):
+    with serve.Executor({"t": small_store}) as ex:
+        with pytest.raises(sql.SqlError):
+            ex.execute("SELECT nope FROM t")
+        # the worker must survive a failed query
+        assert ex.execute("SELECT COUNT(*) AS c FROM t").nrows == 1
+    assert STATS["errors"] == 1
+
+
+def test_closed_executor_rejects(small_store):
+    ex = serve.Executor({"t": small_store})
+    ex.close()
+    with pytest.raises(RuntimeError):
+        ex.submit("SELECT COUNT(*) AS c FROM t")
+
+
+# ----------------------------------------------------------------------
+# UDFs
+# ----------------------------------------------------------------------
+def test_udf_matches_inline_expression(small_store):
+    with serve.Executor({"t": small_store}) as ex:
+        ex.add_function("markup", lambda v, g: v * (1.0 + 0.01 * g))
+        out = ex.execute("SELECT g, SUM(markup(v, g)) AS s FROM t GROUP BY g")
+        ref = sql.execute(
+            "SELECT g, SUM(v * (1.0 + 0.01 * g)) AS s FROM t GROUP BY g",
+            {"t": small_store},
+        )
+        _assert_same(out, ref)
+
+
+def test_udf_in_where(small_store):
+    with serve.Executor({"t": small_store}) as ex:
+        ex.add_function("hot", lambda k: k < 100, returns="bool")
+        out = ex.execute("SELECT COUNT(*) AS c FROM t WHERE hot(k)")
+        ref = sql.execute(
+            "SELECT COUNT(*) AS c FROM t WHERE k < 100", {"t": small_store}
+        )
+        _assert_same(out, ref)
+
+
+def test_udf_session_isolation(small_store):
+    with serve.Executor({"t": small_store}) as ex:
+        s1 = ex.session()
+        s2 = ex.session()
+        s1.add_function("boost", lambda v: v * 2.0)
+        s2.add_function("boost", lambda v: v * 3.0)
+        o1 = s1.execute("SELECT SUM(boost(v)) AS s FROM t")
+        o2 = s2.execute("SELECT SUM(boost(v)) AS s FROM t")
+        base = sql.execute("SELECT SUM(v) AS s FROM t", {"t": small_store})
+        b = float(np.asarray(base.column("s"))[0])
+        assert float(np.asarray(o1.column("s"))[0]) == pytest.approx(2 * b)
+        assert float(np.asarray(o2.column("s"))[0]) == pytest.approx(3 * b)
+        # neither session leaked into the executor scope
+        with pytest.raises(sql.SqlError):
+            ex.execute("SELECT SUM(boost(v)) AS s FROM t")
+
+
+def test_udf_declines_compiled_path(small_store):
+    plan_compile.reset_stats()
+    plan_compile.clear_cache()
+    CONFIG.compiled = "force"
+    try:
+        with serve.Executor({"t": small_store}) as ex:
+            ex.add_function("twice", lambda v: v * 2.0)
+            ex.execute("SELECT g, SUM(twice(v)) AS s FROM t GROUP BY g")
+        assert plan_compile.STATS["compiles"] == 0
+        assert STATS["udf_queries"] == 1
+    finally:
+        CONFIG.compiled = "auto"
+
+
+# ----------------------------------------------------------------------
+# prepared statements
+# ----------------------------------------------------------------------
+def test_prepared_rides_plan_cache():
+    rng = np.random.default_rng(3)
+    n = 1 << 12
+    frame = TensorFrame.from_arrays(
+        {"a": rng.integers(0, 16, n), "w": rng.random(n),
+         "b": rng.integers(0, 100, n)}
+    )
+    plan_compile.reset_stats()
+    plan_compile.clear_cache()
+    CONFIG.compiled = "force"
+    try:
+        with serve.Executor({"t": frame}) as ex:
+            ps = ex.prepare(
+                "SELECT a, SUM(w) AS s FROM t WHERE b > {k} GROUP BY a"
+            )
+            outs = [ps.execute(k=k) for k in (10, 20, 30, 40)]
+        assert plan_compile.STATS["compiles"] == 1
+        assert plan_compile.STATS["hits"] == 3
+        assert STATS["prepared"] == 4
+        assert STATS["plan_cache_hits"] == 3
+        for k, out in zip((10, 20, 30, 40), outs):
+            CONFIG.compiled = "off"
+            ref = sql.execute(
+                f"SELECT a, SUM(w) AS s FROM t WHERE b > {k} GROUP BY a",
+                {"t": frame},
+            )
+            CONFIG.compiled = "force"
+            _assert_same(out, ref)
+    finally:
+        CONFIG.compiled = "auto"
+        CONFIG.compiled_min_rows = 1 << 15
+
+
+# ----------------------------------------------------------------------
+# micro-batching (deterministic: staged queue, one drain)
+# ----------------------------------------------------------------------
+def test_microbatch_shares_store_scans(small_store):
+    ex = serve.Executor({"t": small_store}, auto_start=False)
+    texts = [
+        f"SELECT g, SUM(v) AS s FROM t WHERE k < {200 + i} GROUP BY g"
+        for i in range(5)
+    ]
+    futs = [ex.submit(q) for q in texts]
+    assert ex.drain_once() == 5
+    snap = STATS.snapshot()
+    assert snap["batches"] == 1
+    assert snap["batched_queries"] == 5
+    assert snap["shared_scan_groups"] == 1
+    assert snap["shared_scan_queries"] == 5
+    for q, f in zip(texts, futs):
+        _assert_same(f.result(), sql.execute(q, {"t": small_store}))
+    ex.close()
+
+
+def test_microbatch_coalesces_duplicates(small_store):
+    ex = serve.Executor({"t": small_store}, auto_start=False)
+    q = "SELECT g, SUM(v) AS s FROM t GROUP BY g"
+    futs = [ex.submit(q) for _ in range(4)]
+    assert ex.drain_once() == 4
+    assert STATS["coalesced"] == 3
+    outs = [f.result() for f in futs]
+    assert all(o is outs[0] for o in outs[1:])  # one shared result frame
+    _assert_same(outs[0], sql.execute(q, {"t": small_store}))
+    ex.close()
+
+
+def test_microbatch_respects_cap(small_store):
+    old = CONFIG.serve_max_batch
+    CONFIG.serve_max_batch = 3
+    try:
+        ex = serve.Executor({"t": small_store}, auto_start=False)
+        futs = [
+            ex.submit(f"SELECT COUNT(*) AS c FROM t WHERE k < {i}")
+            for i in range(5)
+        ]
+        assert ex.drain_once() == 3
+        assert ex.drain_once() == 2
+        assert all(f.result().nrows == 1 for f in futs)
+        ex.close()
+    finally:
+        CONFIG.serve_max_batch = old
+
+
+def test_shared_scans_can_be_disabled(small_store):
+    old = CONFIG.serve_shared_scans
+    CONFIG.serve_shared_scans = False
+    try:
+        ex = serve.Executor({"t": small_store}, auto_start=False)
+        futs = [
+            ex.submit(f"SELECT COUNT(*) AS c FROM t WHERE k < {100 + i}")
+            for i in range(3)
+        ]
+        ex.drain_once()
+        assert STATS["shared_scan_groups"] == 0
+        assert all(f.result().nrows == 1 for f in futs)
+        ex.close()
+    finally:
+        CONFIG.serve_shared_scans = old
+
+
+# ----------------------------------------------------------------------
+# thread-safety regressions (ISSUE 7 bugfix satellite)
+# ----------------------------------------------------------------------
+def test_compile_cache_thread_safe():
+    """Concurrent first-compiles and hits against one shared LRU: no
+    lost updates, consistent stats, correct results."""
+    rng = np.random.default_rng(11)
+    n = 1 << 11
+    frame = TensorFrame.from_arrays(
+        {"a": rng.integers(0, 8, n), "w": rng.random(n),
+         "b": rng.integers(0, 50, n)}
+    )
+    frames = {"t": frame}
+    CONFIG.compiled = "off"
+    refs = {
+        k: sql.execute(
+            f"SELECT a, SUM(w) AS s FROM t WHERE b > {k} GROUP BY a", frames
+        )
+        for k in range(THREADS)
+    }
+    plan_compile.reset_stats()
+    plan_compile.clear_cache()
+    CONFIG.compiled = "force"
+    try:
+        def work(seed):
+            r = random.Random(seed)
+            for _ in range(6 * ROUNDS):
+                k = r.randrange(THREADS)
+                out = sql.execute(
+                    f"SELECT a, SUM(w) AS s FROM t WHERE b > {k} "
+                    f"GROUP BY a",
+                    frames,
+                )
+                _assert_same(out, refs[k])
+
+        with ThreadPoolExecutor(THREADS) as tp:
+            list(tp.map(work, range(THREADS)))
+        s = plan_compile.STATS
+        # literals parameterize away: exactly one program, every other
+        # call a hit, nothing lost to races
+        assert s["compiles"] == 1
+        assert s["fallbacks"] == 0
+        # every call is either a hit or THE miss: no lost updates
+        assert s["misses"] == 1
+        assert s["hits"] + s["misses"] == THREADS * 6 * ROUNDS
+    finally:
+        CONFIG.compiled = "auto"
+        CONFIG.compiled_min_rows = 1 << 15
+        plan_compile.clear_cache()
+
+
+def test_string_pool_thread_safe():
+    """POOL.intern from many threads: equal dictionaries must resolve
+    to one object and the pool must not corrupt its buckets."""
+    dicts = [
+        np.array([f"v{j}_{i}" for j in range(20)], dtype=object)
+        for i in range(8)
+    ]
+    pool = store.StringPool(max_entries=64)
+    out: dict = {}
+    lock = threading.Lock()
+
+    def work(seed):
+        r = random.Random(seed)
+        for _ in range(200 * ROUNDS):
+            i = r.randrange(len(dicts))
+            got = pool.intern(dicts[i].copy())
+            with lock:
+                prev = out.setdefault(i, got)
+            assert prev is got  # same content -> same interned object
+            assert list(got) == list(dicts[i])
+
+    with ThreadPoolExecutor(THREADS) as tp:
+        list(tp.map(work, range(THREADS)))
+    assert len(out) == len(dicts)
+
+
+# ----------------------------------------------------------------------
+# concurrent == serial (TPC-H, randomized property)
+# ----------------------------------------------------------------------
+_TPCH_TEMPLATES = [
+    "SELECT l_returnflag, l_linestatus, SUM(l_quantity) AS sum_qty, "
+    "COUNT(*) AS cnt FROM lineitem WHERE l_quantity < {q} "
+    "GROUP BY l_returnflag, l_linestatus",
+    "SELECT SUM(l_extendedprice * l_discount) AS rev FROM lineitem "
+    "WHERE l_shipdate >= DATE '1994-01-01' "
+    "AND l_shipdate < DATE '1995-01-01' "
+    "AND l_discount BETWEEN {lo} AND {hi} AND l_quantity < {q}",
+    "SELECT l_shipmode, COUNT(*) AS c FROM lineitem "
+    "WHERE l_quantity < {q} GROUP BY l_shipmode ORDER BY l_shipmode",
+]
+
+
+def _draw(rng):
+    t = rng.randrange(len(_TPCH_TEMPLATES))
+    lo = round(0.02 + 0.01 * rng.randrange(5), 2)
+    return _TPCH_TEMPLATES[t].format(
+        q=rng.randrange(10, 40), lo=lo, hi=round(lo + 0.02, 2)
+    )
+
+
+@pytest.fixture(scope="module")
+def lineitem_store(tpch_small):
+    tables, _ = tpch_small
+    return store.Table.from_arrays(tables["lineitem"], chunk_rows=1024)
+
+
+def test_concurrent_sessions_match_serial(lineitem_store):
+    """The serving property: N sessions hammering randomized
+    parameterized TPC-H queries concurrently get exactly the serial
+    answers, and the admission queue demonstrably micro-batched."""
+    scope = {"lineitem": lineitem_store}
+    rng = random.Random(1234)
+    texts = [_draw(rng) for _ in range(THREADS * 4 * ROUNDS)]
+    serial = {q: sql.execute(q, scope) for q in set(texts)}
+
+    with serve.Executor(scope) as ex:
+        sessions = [ex.session() for _ in range(THREADS)]
+
+        def work(i):
+            got = []
+            for q in texts[i::THREADS]:
+                got.append((q, sessions[i].execute(q)))
+            return got
+
+        with ThreadPoolExecutor(THREADS) as tp:
+            results = [p for chunk in tp.map(work, range(THREADS))
+                       for p in chunk]
+
+    assert len(results) == len(texts)
+    for q, out in results:
+        _assert_same(out, serial[q])
+    snap = STATS.snapshot()
+    assert snap["admitted"] == len(texts)
+    assert snap["errors"] == 0
+    # concurrency actually produced multi-query batches
+    assert snap["batches"] < snap["admitted"]
+    assert snap["batched_queries"] >= 2
+
+
+def test_randomized_batches_match_serial_property(lineitem_store):
+    """Property sweep over randomized staged batches: for any drawn
+    batch of parameterized queries, batched execution (shared scans +
+    coalescing on) equals one-at-a-time serial execution."""
+    scope = {"lineitem": lineitem_store}
+    for trial in range(6 if STRESS else 3):
+        rng = random.Random(100 + trial)
+        texts = [_draw(rng) for _ in range(rng.randrange(2, 9))]
+        serial = {q: sql.execute(q, scope) for q in set(texts)}
+        STATS.reset()
+        ex = serve.Executor(scope, auto_start=False)
+        futs = [ex.submit(q) for q in texts]
+        assert ex.drain_once() == len(texts)
+        for q, f in zip(texts, futs):
+            _assert_same(f.result(), serial[q])
+        snap = STATS.snapshot()
+        assert snap["batches"] == 1
+        if len(texts) >= 2:
+            assert snap["batched_queries"] == len(texts)
+            assert snap["shared_scan_queries"] + snap["coalesced"] >= 2
+        ex.close()
