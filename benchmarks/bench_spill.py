@@ -1,0 +1,150 @@
+"""Out-of-core chunk-pipelined execution vs eager (ISSUE 8 acceptance).
+
+Lanes over a date-clustered lineitem store, all through the SQL layer:
+
+- **q1/eager vs q1/ooc_uncapped** — TPC-H q1 (the widest streaming
+  group-by) at a realistic scale floor (sf >= 0.1, 64Ki-row chunks):
+  whole-scan materialize + one group-by vs ``out_of_core=force`` with
+  no memory budget (chunk-pipelined scan + streaming partials, nothing
+  spilled).  The per-chunk dispatch overhead only amortizes with
+  full-size chunks, so these lanes pin their own scale instead of the
+  suite's quick sf.  The acceptance bar is within 2x of eager;
+  ``derived`` reports the ratio.
+- **hicard/capped@{1MiB,256KiB,64KiB}** — a high-cardinality group-by
+  (``GROUP BY l_orderkey``: partial pools are tens of thousands of
+  rows, unlike q1's four groups) under a shrinking
+  ``memory_budget_bytes``: partials spill to ``.tfb`` and re-hydrate
+  on merge.  ``derived`` reports spilled/re-read bytes and evictions
+  from ``core.pipeline.STATS``.
+- **overlap** — the same q1 stream over a *disk-backed* ``.tfb`` copy
+  of the store (chunk decode actually costs something) with
+  ``ooc_prefetch=0`` (strictly alternating decode and compute) vs the
+  default prefetch depth, isolating the win from decoding chunk k+1 on
+  the host while the device works on chunk k.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from .common import measure, report, tpch_tables
+
+
+def _lineitem_store(sf: float, chunk_rows: int):
+    from repro import store
+
+    li = tpch_tables(sf)["lineitem"]
+    order = np.argsort(li["l_shipdate"], kind="stable")
+    li = {k: v[order] for k, v in li.items()}
+    return store.Table.from_arrays(li, chunk_rows=chunk_rows)
+
+
+def run(sf: float = 0.01, quick: bool = False):
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro import sql
+    from repro.core import pipeline
+    from repro.core.config import CONFIG
+    from repro.queries.tpch_sql import sql_text
+
+    # q1 lanes need full-size chunks to amortize per-chunk dispatch;
+    # hicard lanes need small chunks + small budgets to exercise spill
+    big = _lineitem_store(max(sf, 0.1), 1 << 16)
+    small = _lineitem_store(sf, 1 << 13 if quick else 1 << 15)
+    big_scope = {"lineitem": big}
+    scope = {"lineitem": small}
+    q1 = sql_text("q1")
+    hicard = (
+        "SELECT l_orderkey, SUM(l_extendedprice) AS revenue, "
+        "COUNT(*) AS n, MAX(l_quantity) AS maxq "
+        "FROM lineitem GROUP BY l_orderkey"
+    )
+    repeats = 2 if quick else 5
+
+    saved = (
+        CONFIG.out_of_core,
+        CONFIG.memory_budget_bytes,
+        CONFIG.ooc_prefetch,
+    )
+    try:
+        CONFIG.out_of_core = "off"
+        CONFIG.memory_budget_bytes = None
+        t_eager = measure(lambda: sql.execute(q1, big_scope), repeats=repeats)
+        report(
+            "spill/q1/eager",
+            t_eager,
+            f"n={big.nrows};chunks={big.n_chunks}",
+        )
+
+        CONFIG.out_of_core = "force"
+        pipeline.reset_stats()
+        t_ooc = measure(lambda: sql.execute(q1, big_scope), repeats=repeats)
+        pipeline.sync_spill_stats()
+        ratio = t_ooc / t_eager
+        report(
+            "spill/q1/ooc_uncapped",
+            t_ooc,
+            f"vs_eager={ratio:.2f}x;within2x={ratio <= 2.0};"
+            f"streamed={pipeline.STATS['chunks_streamed']}",
+        )
+
+        CONFIG.out_of_core = "off"
+        t_hc_eager = measure(lambda: sql.execute(hicard, scope), repeats=repeats)
+        report(
+            "spill/hicard/eager",
+            t_hc_eager,
+            f"n={small.nrows};chunks={small.n_chunks}",
+        )
+        CONFIG.out_of_core = "force"
+        for label, budget in (
+            ("1MiB", 1 << 20),
+            ("256KiB", 1 << 18),
+            ("64KiB", 1 << 16),
+        ):
+            CONFIG.memory_budget_bytes = budget
+            pipeline.reset_stats()
+            t_cap = measure(lambda: sql.execute(hicard, scope), repeats=repeats)
+            pipeline.sync_spill_stats()
+            s = pipeline.STATS
+            report(
+                f"spill/hicard/capped@{label}",
+                t_cap,
+                f"vs_eager={t_cap / t_hc_eager:.2f}x;"
+                f"spilled={s['bytes_spilled']};reread={s['bytes_reread']};"
+                f"evictions={s['evictions']};peak={s['peak_tracked_bytes']}",
+            )
+
+        CONFIG.memory_budget_bytes = None
+        tmp = tempfile.mkdtemp(prefix="bench-spill-")
+        try:
+            from repro import store
+
+            path = os.path.join(tmp, "lineitem.tfb")
+            store.write_store(path, big)
+            disk_scope = {"lineitem": store.open_store(path)}
+            CONFIG.ooc_prefetch = 0
+            t_sync = measure(
+                lambda: sql.execute(q1, disk_scope), repeats=repeats
+            )
+            CONFIG.ooc_prefetch = saved[2]
+            t_pre = measure(
+                lambda: sql.execute(q1, disk_scope), repeats=repeats
+            )
+            report(
+                "spill/q1/disk_prefetch",
+                t_pre,
+                f"overlap_win={t_sync / max(t_pre, 1e-9):.2f}x;"
+                f"depth={CONFIG.ooc_prefetch}",
+            )
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    finally:
+        (
+            CONFIG.out_of_core,
+            CONFIG.memory_budget_bytes,
+            CONFIG.ooc_prefetch,
+        ) = saved

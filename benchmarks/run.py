@@ -52,6 +52,7 @@ def main() -> None:
         bench_roofline,
         bench_scaling,
         bench_serve,
+        bench_spill,
         bench_sql,
         bench_store,
         bench_tpch,
@@ -69,6 +70,7 @@ def main() -> None:
         "scaling": lambda: bench_scaling.run(quick=quick),
         "compile": lambda: bench_compile.run(sf=sf, quick=quick),
         "serve": lambda: bench_serve.run(sf=sf, quick=quick),
+        "spill": lambda: bench_spill.run(sf=sf, quick=quick),
         "loading": lambda: bench_loading.run(sf=sf, quick=quick),
         "memory": lambda: bench_memory.run(sf=sf, quick=quick),
         "cores": lambda: bench_cores.run(sf=sf, quick=quick),

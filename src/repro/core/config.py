@@ -7,6 +7,7 @@ plus TPU-adaptation knobs (measure dtype, device string path).
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass
@@ -57,6 +58,29 @@ class EngineConfig:
     serve_batch_window_ms: float = 2.0
     serve_shared_scans: bool = True
     serve_coalesce: bool = True
+    # Out-of-core execution (repro.core.pipeline / repro.sql.stream):
+    # 'off' never streams, 'force' streams every supported store-backed
+    # aggregate/join pipeline chunk-by-chunk, 'auto' streams when the
+    # probe-side store table has at least ooc_min_rows rows (mirrors
+    # distributed/compiled).  Unsupported plan shapes fall back to the
+    # eager path in every mode (counted in pipeline.STATS['fallbacks']).
+    out_of_core: str = "auto"
+    ooc_min_rows: int = 1 << 20
+    # Byte budget for host-side intermediates held by the out-of-core
+    # layer (partial aggregates, spillable frames).  None = unbounded
+    # (never spill); small budgets force LRU spills to .tfb v2 chunk
+    # files with transparent re-hydration on access.
+    memory_budget_bytes: Optional[int] = None
+    # Directory for spill files; None = a per-process temp dir cleaned
+    # at exit (spilled frames are additionally deleted on GC).
+    spill_dir: Optional[str] = None
+    # Host-side chunk prefetch depth of the streaming scan: chunk k+1
+    # decodes/filters on a worker thread while chunk k runs on device.
+    # 0 disables the overlap (the bench_spill baseline).
+    ooc_prefetch: int = 2
+    # Merge accumulated per-chunk partial aggregates every N chunks
+    # (bounds the partial pool even when the budget is unbounded).
+    ooc_merge_every: int = 8
 
 
 CONFIG = EngineConfig()

@@ -604,6 +604,15 @@ class TensorFrame:
                     offloaded[name] = OffloadedColumn(mc.values)
             else:  # int / date / bool days already in physical form
                 int_cols.append((name, mc.values, mc.ctype, None))
+        # explicit store validity bitmaps become the engine's hidden
+        # __v__ companion columns (float nulls stay NaN-encoded)
+        for name, mc in result.columns.items():
+            if mc.validity is not None and not bool(mc.validity.all()):
+                vname = _valid_name(name)
+                order.append(vname)
+                int_cols.append(
+                    (vname, mc.validity.astype(np.int64), "bool", None)
+                )
         out = _assemble_frame(int_cols, float_cols, offloaded, order, n)
         # thread zone-map uniqueness/distinct/bounds stats into the
         # frame so joins and group-bys skip their probing work

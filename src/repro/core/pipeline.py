@@ -1,0 +1,487 @@
+"""Morsel-driven out-of-core execution over the store's chunk grid.
+
+Instead of materializing a whole store scan into device tensors, the
+pipeline streams it chunk by chunk:
+
+- ``ChunkScan`` iterates the zone-map survivors of a planned store scan
+  as small per-chunk ``TensorFrame`` s.  A prefetch thread
+  (``CONFIG.ooc_prefetch`` deep) decodes chunk ``k+1`` host-side while
+  the device processes chunk ``k`` — decode and compute overlap.  Each
+  chunk frame is seeded with its own zone-map bounds (``ColStats``), so
+  chunk-level pruning stays available *downstream* of filters and
+  joins.
+- ``HashBuild`` is the build-once/probe-per-chunk join side: the build
+  frame's key is coded once (dictionary identity for interned store
+  dictionaries, range compression from the build's own bounds for
+  ints), and every probe chunk reuses it — a direct-address table for
+  provably-unique inner builds, sorted membership codes for semi/anti.
+  Probe chunks whose key bounds miss the build's range are skipped
+  outright (inner/semi) or passed through unprobed (anti).
+- ``StreamAgg`` accumulates per-chunk partial aggregates (mean
+  decomposes into sum+count) and re-aggregates the partials every
+  ``CONFIG.ooc_merge_every`` chunks.  Partial blocks live under the
+  spill manager (``repro.store.spill``), so a run under
+  ``CONFIG.memory_budget_bytes`` keeps its working set bounded: cold
+  partials go to ``.tfb`` chunk files and re-hydrate transparently.
+
+``STATS`` makes the whole thing observable: chunks streamed/pruned,
+rows streamed, pipeline and fallback counts, plus the spill manager's
+bytes spilled/re-read, evictions and peak tracked bytes.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .config import CONFIG
+from .frame import INT, TensorFrame
+from .join import _hstack, _right_name_map
+
+#: Observable pipeline counters.  The spill keys mirror
+#: ``repro.store.spill.SPILL.counters`` (synced after every pipeline).
+STATS = {
+    "pipelines": 0,
+    "chunks_streamed": 0,
+    "chunks_pruned": 0,
+    "rows_streamed": 0,
+    "partial_merges": 0,
+    "generic_probes": 0,
+    "fallbacks": 0,
+    "bytes_spilled": 0,
+    "bytes_reread": 0,
+    "evictions": 0,
+    "peak_tracked_bytes": 0,
+}
+
+
+def reset_stats() -> None:
+    from repro.store.spill import SPILL
+
+    for k in STATS:
+        STATS[k] = 0
+    SPILL.reset_counters()
+
+
+def sync_spill_stats() -> None:
+    from repro.store.spill import SPILL
+
+    STATS.update(SPILL.counters)
+
+
+_INT_DOMAIN = ("int", "date", "bool")
+
+
+# ----------------------------------------------------------------------
+# chunk-pipelined store scan
+# ----------------------------------------------------------------------
+class ChunkScan:
+    """Iterate a predicated store scan as per-chunk TensorFrames.
+
+    Chunk decode (numpy: rle expansion, row masks, validity) runs on a
+    prefetch thread up to ``CONFIG.ooc_prefetch`` chunks ahead; the
+    consuming thread only does the host->device transfer and compute.
+    ``prefetch=0`` degrades to fully synchronous iteration.
+    """
+
+    def __init__(self, table, columns, predicates):
+        from repro import store as _store
+
+        self.table = table
+        self.proj, self.phys_preds, self.survivors = _store.plan_scan(
+            table, columns, predicates
+        )
+        STATS["chunks_pruned"] += table.n_chunks - len(self.survivors)
+
+    def __len__(self) -> int:
+        return len(self.survivors)
+
+    def _results(self):
+        from repro import store as _store
+
+        depth = max(0, int(CONFIG.ooc_prefetch))
+        if depth == 0 or len(self.survivors) <= 1:
+            for i in self.survivors:
+                yield int(i), _store.scan_chunk(
+                    self.table, self.proj, self.phys_preds, int(i)
+                )
+            return
+        q: "queue.Queue" = queue.Queue(maxsize=depth)
+        DONE = object()
+        stop = threading.Event()
+
+        def put(item) -> bool:
+            # never block forever: an abandoned consumer (exception in
+            # the pipeline body closes this generator early) sets
+            # ``stop`` and the producer bails out instead of deadlocking
+            while not stop.is_set():
+                try:
+                    q.put(item, timeout=0.05)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def producer():
+            try:
+                for i in self.survivors:
+                    if stop.is_set():
+                        return
+                    res = _store.scan_chunk(
+                        self.table, self.proj, self.phys_preds, int(i)
+                    )
+                    if not put((int(i), res)):
+                        return
+            except BaseException as e:  # re-raised on the consumer side
+                put(e)
+            finally:
+                put(DONE)
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        try:
+            while True:
+                item = q.get()
+                if item is DONE:
+                    break
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            stop.set()
+            while True:  # unblock a producer stuck on a full queue
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    break
+            t.join()
+
+    def __iter__(self):
+        for i, res in self._results():
+            STATS["chunks_streamed"] += 1
+            STATS["rows_streamed"] += res.nrows
+            f = TensorFrame.from_store(self.table, self.proj, [], result=res)
+            # tighten the table-wide bounds from_store seeded down to
+            # THIS chunk's zone map — downstream joins prune on them
+            for name in self.proj:
+                col = self.table.columns[name]
+                if col.ctype in _INT_DOMAIN and col.encoding != "dict":
+                    st = col.chunks[i].stats
+                    if res.nrows and st.vmin is not None:
+                        f.set_stats(
+                            name, vmin=int(st.vmin), vmax=int(st.vmax)
+                        )
+            yield f
+
+
+# ----------------------------------------------------------------------
+# build-once / probe-per-chunk joins
+# ----------------------------------------------------------------------
+class HashBuild:
+    """One join's build side, prepared once and probed per chunk.
+
+    Single-column keys get a build-once fast path: int/date keys are
+    range-compressed against the build's own bounds (out-of-range probe
+    values can never match), interned dictionary keys share codes by
+    identity.  Provably-unique inner builds scatter one direct-address
+    table; semi/anti sort the build codes once.  Everything else —
+    multi-column keys, non-unique inner builds, left outer, foreign
+    dictionaries — probes through the engine's general join per chunk,
+    which is still streaming-safe (each probe row is independent).
+    """
+
+    def __init__(
+        self,
+        probe_keys: Sequence[str],
+        build: TensorFrame,
+        build_keys: Sequence[str],
+        how: str,
+        suffix: str = "_r",
+    ):
+        self.probe_keys = list(probe_keys)
+        self.build_keys = list(build_keys)
+        self.build = build.materialize()
+        self.how = how
+        self.suffix = suffix
+        self._fast = None  # (mode, kind, lo, hi, payload, domain)
+        if len(self.build_keys) == 1 and how in ("inner", "semi", "anti"):
+            self._prepare_fast()
+
+    def _build_codes(self):
+        """(codes, kind, lo, hi, domain) for the single build key, or
+        None when the key shape has no build-once form."""
+        bk = self.build_keys[0]
+        m = self.build.meta(bk)
+        if m.kind in _INT_DOMAIN:
+            if self.build.nrows == 0:
+                return None
+            lo, hi = self.build.int_bounds(bk)
+            codes = (self.build.col_values(bk) - np.int64(lo)).astype(INT)
+            domain = hi - lo + 1
+            kind = "intrange"
+        elif m.kind == "dict":
+            codes = self.build.col_values(bk).astype(INT)
+            lo, hi = 0, max(0, int(m.dictionary.shape[0]) - 1)
+            domain = int(m.dictionary.shape[0])
+            kind = "dict"
+        else:
+            return None
+        valid = self.build.valid_array(bk)
+        if valid is not None:
+            codes = jnp.where(valid, codes, np.int64(-1))
+        return codes, kind, lo, hi, domain
+
+    def _prepare_fast(self) -> None:
+        got = self._build_codes()
+        if got is None:
+            return
+        codes, kind, lo, hi, domain = got
+        if self.how in ("semi", "anti"):
+            self._fast = ("member", kind, lo, hi, jnp.sort(codes), domain)
+            return
+        # inner: need a provably-unique build side for direct addressing
+        nb = self.build.nrows
+        if domain > max(1 << 22, 16 * max(1, nb)):
+            return  # direct-address table would dwarf the build side
+        hint = self.build.unique_hint(self.build_keys)
+        if hint is None:
+            # pay the sort test ONCE at build time (not per chunk)
+            m_build = int((jnp.diff(jnp.sort(codes)) != 0).sum()) + 1
+            hint = m_build == nb
+            self.build.set_stats(
+                self.build_keys[0], unique=bool(hint), distinct=m_build
+            )
+        if not hint:
+            return
+        tbl = jnp.full((domain + 2,), np.int64(-1))
+        idx = jnp.where(codes >= 0, codes, np.int64(domain))
+        tbl = tbl.at[idx].set(jnp.arange(nb, dtype=INT))
+        self._fast = ("dar", kind, lo, hi, tbl, domain)
+
+    # -- chunk-level pruning -------------------------------------------
+    def disjoint(self, f: TensorFrame) -> bool:
+        """Can the chunk's key bounds prove zero matches?  (Callers may
+        then skip the chunk for inner/semi, or pass it through unprobed
+        for anti — never drop rows on an anti join.)"""
+        if self._fast is None or self._fast[1] != "intrange":
+            return False
+        st = f.col_stats(self.probe_keys[0])
+        if st is None or st.vmin is None:
+            return False
+        _, _, lo, hi, _, _ = self._fast
+        return st.vmax < lo or st.vmin > hi
+
+    def _probe_codes(self, f: TensorFrame) -> Optional[jnp.ndarray]:
+        pk = self.probe_keys[0]
+        m = f.meta(pk)
+        _, kind, lo, hi, _, _ = self._fast
+        if kind == "intrange":
+            if m.kind not in _INT_DOMAIN:
+                return None
+            pv = f.col_values(pk)
+            codes = jnp.where(
+                (pv < lo) | (pv > hi), np.int64(-1), pv - np.int64(lo)
+            ).astype(INT)
+        else:  # dict: codes are shared only by dictionary identity
+            if m.kind != "dict" or m.dictionary is not self.build.meta(
+                self.build_keys[0]
+            ).dictionary:
+                return None
+            codes = f.col_values(pk).astype(INT)
+        valid = f.valid_array(pk)
+        if valid is not None:
+            codes = jnp.where(valid, codes, np.int64(-1))
+        return codes
+
+    # -- the probe ------------------------------------------------------
+    def apply(self, f: TensorFrame) -> TensorFrame:
+        if self._fast is not None:
+            codes = self._probe_codes(f)
+            if codes is not None:
+                mode, _, _, _, payload, domain = self._fast
+                if mode == "member":
+                    sb = payload
+                    if int(sb.shape[0]) == 0:
+                        exists = jnp.zeros(codes.shape, dtype=bool)
+                    else:
+                        pos = jnp.clip(
+                            jnp.searchsorted(sb, codes), 0, sb.shape[0] - 1
+                        )
+                        exists = (sb[pos] == codes) & (codes >= 0)
+                    return f.mask_rows(
+                        exists if self.how == "semi" else ~exists
+                    )
+                # direct-address inner probe against the prebuilt table
+                probe_idx = jnp.where(
+                    codes >= 0,
+                    jnp.minimum(codes, np.int64(max(0, domain - 1))),
+                    np.int64(domain + 1),
+                )
+                pos = payload[probe_idx]
+                matched = pos >= 0
+                cnt = int(matched.sum())  # the one sync per chunk
+                lrows = jnp.nonzero(matched, size=cnt)[0].astype(INT)
+                rrows = pos[lrows]
+                name_map = _right_name_map(
+                    f, self.build, self._drop_right(), self.suffix
+                )
+                return _hstack(
+                    f.take(lrows), self.build.take(rrows), name_map
+                )
+        STATS["generic_probes"] += 1
+        return f.join(
+            self.build,
+            left_on=self.probe_keys,
+            right_on=self.build_keys,
+            how=self.how,
+            suffix=self.suffix,
+        )
+
+    def _drop_right(self) -> List[str]:
+        return [
+            rk
+            for lk, rk in zip(self.probe_keys, self.build_keys)
+            if lk == rk
+        ]
+
+
+# ----------------------------------------------------------------------
+# streaming group-by aggregation
+# ----------------------------------------------------------------------
+_PARTIAL_MERGE = {"sum": "sum", "count": "sum", "size": "sum",
+                  "min": "min", "max": "max"}
+
+STREAMABLE_AGGS = frozenset(("sum", "count", "size", "min", "max", "mean"))
+
+
+class StreamAgg:
+    """Accumulate per-chunk partial aggregates; merge under the budget.
+
+    ``specs`` are engine agg specs ``(out_name, fn, column)`` with
+    ``fn`` in ``STREAMABLE_AGGS``.  Mean decomposes into sum+count
+    partials and reassembles at finalize.  Keyed partials are host
+    blocks registered with the spill manager — under a tight
+    ``CONFIG.memory_budget_bytes`` they spill to ``.tfb`` and re-hydrate
+    at each merge; keyless aggregates fold into python scalars.
+    """
+
+    def __init__(self, key_names: List[str], specs):
+        self.key_names = list(key_names)
+        self.partials: List[Tuple[str, str, str]] = []
+        self.finals: List[Tuple[str, str, Tuple[str, ...]]] = []
+        for idx, (out_name, fn, colname) in enumerate(specs):
+            if fn not in STREAMABLE_AGGS:
+                raise ValueError(f"cannot stream aggregate {fn!r}")
+            if fn == "mean":
+                ps, pc = f"__p{idx}s", f"__p{idx}c"
+                self.partials.append((ps, "sum", colname))
+                self.partials.append((pc, "count", colname))
+                self.finals.append((out_name, "mean", (ps, pc)))
+            else:
+                pn = f"__p{idx}"
+                self.partials.append((pn, fn, colname))
+                self.finals.append((out_name, fn, (pn,)))
+        self._order = self.key_names + [p for p, _, _ in self.partials]
+        self._merge_specs = [
+            (pn, _PARTIAL_MERGE[fn], pn) for pn, fn, _ in self.partials
+        ]
+        self._pending: List = []  # Spillable partial blocks
+        self._merged = None  # Spillable holding the running merge
+        # keyless accumulators
+        self._scalars: Dict[str, object] = {}
+        self._scalar_rows = 0
+
+    # -- keyed path -----------------------------------------------------
+    def _partial_block(self, part: TensorFrame) -> Dict[str, np.ndarray]:
+        return {name: part.column(name) for name in self._order}
+
+    def add(self, f: TensorFrame) -> None:
+        if f.nrows == 0:
+            return
+        from repro.store.spill import SPILL
+
+        if not self.key_names:
+            self._add_scalar(f)
+            return
+        part = f.groupby(self.key_names).agg(self.partials)
+        self._pending.append(SPILL.register(self._partial_block(part)))
+        if len(self._pending) >= max(2, int(CONFIG.ooc_merge_every)):
+            self._merge()
+
+    def _merge(self) -> None:
+        if not self._pending and self._merged is None:
+            return
+        blocks = []
+        handles = list(self._pending)
+        if self._merged is not None:
+            handles.append(self._merged)
+        for h in handles:
+            data, _ = h.get()
+            blocks.append(data)
+            h.release()
+        if len(blocks) == 1:
+            cat = blocks[0]
+        else:
+            cat = {
+                name: np.concatenate([b[name] for b in blocks])
+                for name in self._order
+            }
+        mf = TensorFrame.from_arrays(cat)
+        merged = mf.groupby(self.key_names).agg(self._merge_specs)
+        from repro.store.spill import SPILL
+
+        self._merged = SPILL.register(self._partial_block(merged))
+        self._pending = []
+        STATS["partial_merges"] += 1
+
+    # -- keyless path ---------------------------------------------------
+    def _add_scalar(self, f: TensorFrame) -> None:
+        got = f.agg(self.partials)
+        self._scalar_rows += f.nrows
+        for pn, fn, _ in self.partials:
+            v = got[pn]
+            if pn not in self._scalars:
+                self._scalars[pn] = v
+            elif fn in ("sum", "count", "size"):
+                self._scalars[pn] = self._scalars[pn] + v
+            elif fn == "min":
+                self._scalars[pn] = min(self._scalars[pn], v)
+            else:  # max
+                self._scalars[pn] = max(self._scalars[pn], v)
+
+    # -- finalize -------------------------------------------------------
+    def finalize(self) -> Optional[TensorFrame]:
+        from .expr import col
+
+        if not self.key_names:
+            if self._scalar_rows == 0:
+                return None  # caller falls back to the eager empty path
+            out: Dict[str, np.ndarray] = {}
+            for out_name, fn, pns in self.finals:
+                if fn == "mean":
+                    s, c = self._scalars[pns[0]], self._scalars[pns[1]]
+                    v = float(s) / c if c else float("nan")
+                else:
+                    v = self._scalars[pns[0]]
+                out[out_name] = np.asarray([v])
+            return TensorFrame.from_arrays(out)
+        self._merge()
+        if self._merged is None:
+            return None
+        data, _ = self._merged.get()
+        self._merged.release()
+        self._merged = None
+        mf = TensorFrame.from_arrays(dict(data))
+        rename: Dict[str, str] = {}
+        for out_name, fn, pns in self.finals:
+            if fn == "mean":
+                mf = mf.with_column(out_name, col(pns[0]) / col(pns[1]))
+            else:
+                rename[pns[0]] = out_name
+        mf = mf.rename(rename)
+        return mf.select(
+            self.key_names + [out_name for out_name, _, _ in self.finals]
+        )

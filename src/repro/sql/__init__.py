@@ -82,7 +82,13 @@ def execute_plan(plan, frames: Dict, *, scan_cache=None):
     """
     from repro.core.config import CONFIG
 
-    if CONFIG.compiled != "off" and not scan_cache:
+    # out_of_core=force must reach the chunk-streaming lowering — the
+    # compiled path materializes whole scans inside its jitted program
+    if (
+        CONFIG.compiled != "off"
+        and CONFIG.out_of_core != "force"
+        and not scan_cache
+    ):
         from . import compile as _compile
 
         out = _compile.maybe_execute_compiled(plan, frames)

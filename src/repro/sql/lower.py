@@ -309,6 +309,16 @@ def lower_plan(
             how=node.how,
         )
     if isinstance(node, Aggregate):
+        if scan_cache is None:
+            # out-of-core: group-by-aggregates over store-backed scan
+            # chains can run chunk-streamed instead of materializing
+            # the whole scan (repro.sql.stream decides; returns None
+            # when the plan shape or CONFIG gates it off)
+            from . import stream as _stream
+
+            out = _stream.try_stream_aggregate(node, frames, _memo)
+            if out is not None:
+                return out
         return _lower_aggregate(node, lower_plan(node.child, frames, _memo, scan_cache))
     if isinstance(node, Project):
         return _lower_project(node, lower_plan(node.child, frames, _memo, scan_cache))
@@ -355,7 +365,14 @@ def lower_plan(
     raise TypeError(f"unknown plan node {type(node).__name__}")
 
 
-def _lower_aggregate(node: Aggregate, f: TensorFrame) -> TensorFrame:
+def prepare_aggregate_inputs(node: Aggregate, f: TensorFrame):
+    """Materialize an Aggregate's key and input expressions on ``f``.
+
+    Returns ``(frame, key_names, specs)`` with ``specs`` in engine
+    ``(out_name, fn, column)`` form.  Shared between the eager lowering
+    below and the chunk-streaming path (``repro.sql.stream``), which
+    runs it once per probe chunk.
+    """
     key_names: List[str] = []
     for name, e in node.keys:
         if not (isinstance(e, SCol) and e.internal == name and f.has_column(name)):
@@ -372,6 +389,11 @@ def _lower_aggregate(node: Aggregate, f: TensorFrame) -> TensorFrame:
             colname = f"__in.{name}"
             f = f.with_column(colname, to_expr(e))
         specs.append((name, fn, colname))
+    return f, key_names, specs
+
+
+def _lower_aggregate(node: Aggregate, f: TensorFrame) -> TensorFrame:
+    f, key_names, specs = prepare_aggregate_inputs(node, f)
     if key_names:
         return f.groupby(key_names).agg(specs)
     scalars = f.agg(specs)

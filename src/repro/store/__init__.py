@@ -35,7 +35,9 @@ from .scan import (
     Pred,
     ScanResult,
     chunk_may_match,
+    plan_scan,
     scan,
+    scan_chunk,
     shared_scan,
 )
 from .format import (
@@ -46,6 +48,7 @@ from .format import (
     write_arrays,
     write_store,
 )
+from .spill import SPILL, SpillManager, Spillable, block_bytes
 
 __all__ = [
     "POOL",
@@ -64,7 +67,9 @@ __all__ = [
     "Pred",
     "ScanResult",
     "chunk_may_match",
+    "plan_scan",
     "scan",
+    "scan_chunk",
     "shared_scan",
     "MAGIC_V2",
     "is_v2",
@@ -72,4 +77,8 @@ __all__ = [
     "read_arrays",
     "write_arrays",
     "write_store",
+    "SPILL",
+    "SpillManager",
+    "Spillable",
+    "block_bytes",
 ]

@@ -19,6 +19,12 @@ Layout (a directory, like v1):
   Dictionaries are interned into the process pool at load, so two
   tables (or two loads of one table) with equal dictionaries share one
   array object and merge in O(1).
+- ``<col>.valid`` — nullable columns: per-chunk ``np.packbits``
+  validity bitmaps (True = present).  Only chunks with nulls write one
+  (their manifest entries carry a ``voffset``); files without it read
+  as before, so pre-bitmap v2 tables stay compatible and int/date/str
+  nulls now round-trip losslessly instead of surviving only as float
+  NaN.
 
 ``open_store`` returns a ``Table`` whose chunks hold loader callbacks:
 payloads hit disk on first access and are cached.  ``read_arrays`` is
@@ -106,6 +112,8 @@ def write_store(path: str, table: Table) -> None:
             _write_plain_str(base, col, entry)
         else:
             _write_binary(base, col, entry)
+        if col.has_validity():
+            _write_validity(base, col, entry)
         manifest["columns"].append(entry)
     with open(os.path.join(path, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -163,6 +171,26 @@ def _write_plain_str(base: str, col: Column, entry: dict) -> None:
             off_pos += offs.nbytes
 
 
+def _write_validity(base: str, col: Column, entry: dict) -> None:
+    """``<col>.valid``: per-chunk ``np.packbits`` validity bitmaps.
+
+    Chunks without nulls write nothing; their manifest entries carry no
+    ``voffset`` and load as all-valid.  Added alongside v2 without a
+    magic bump — older readers ignored the unknown key, older files
+    simply lack it (nulls then survive only as float NaN, the legacy
+    behavior)."""
+    pos = 0
+    with open(base + ".valid", "wb") as f:
+        for c, cent in zip(col.chunks, entry["chunks"]):
+            v = c.validity()
+            if v is None:
+                continue
+            packed = np.packbits(np.asarray(v, dtype=bool))
+            f.write(packed.tobytes())
+            cent["voffset"] = pos
+            pos += packed.nbytes
+
+
 def write_arrays(
     path: str,
     data: Dict[str, np.ndarray],
@@ -170,10 +198,12 @@ def write_arrays(
     chunk_rows: int = DEFAULT_CHUNK_ROWS,
     policy: EncodingPolicy = DEFAULT_POLICY,
     encode: Optional[Dict[str, str]] = None,
+    validity: Optional[Dict[str, np.ndarray]] = None,
 ) -> Table:
     """Chunk/encode host arrays and persist them; returns the table."""
     table = Table.from_arrays(
-        data, chunk_rows=chunk_rows, policy=policy, encode=encode
+        data, chunk_rows=chunk_rows, policy=policy, encode=encode,
+        validity=validity,
     )
     write_store(path, table)
     return table
@@ -241,6 +271,11 @@ def open_store(path: str, manifest: Optional[dict] = None) -> Table:
             if ctype == "str" and encoding == "plain"
             else None
         )
+        validf = (
+            _ColumnFile(base + ".valid")
+            if any("voffset" in c for c in entry["chunks"])
+            else None
+        )
         chunks: List[Chunk] = []
         for cent in entry["chunks"]:
             stats = ChunkStats(
@@ -249,10 +284,13 @@ def open_store(path: str, manifest: Optional[dict] = None) -> Table:
                 cent["stats"]["nulls"],
                 cent["stats"]["distinct"],
             )
+            vloader = None
+            if validf is not None and "voffset" in cent:
+                vloader = _make_validity_loader(validf, cent)
             chunks.append(
                 Chunk(cent["n"], stats, loader=_make_loader(
                     data, offf, ctype, encoding, cent
-                ))
+                ), vloader=vloader)
             )
         columns[name] = Column(
             name,
@@ -263,6 +301,18 @@ def open_store(path: str, manifest: Optional[dict] = None) -> Table:
             bulk_loader=_make_bulk_loader(data, offf, ctype, encoding, entry),
         )
     return Table(columns, manifest["nrows"], manifest["chunk_rows"])
+
+
+def _make_validity_loader(validf: _ColumnFile, cent: dict):
+    n = int(cent["n"])
+    voffset = int(cent["voffset"])
+    nbytes = (n + 7) // 8
+
+    def load_validity():
+        packed = np.frombuffer(validf.read(voffset, nbytes), dtype=np.uint8)
+        return np.unpackbits(packed, count=n).astype(bool)
+
+    return load_validity
 
 
 def _make_dict_loader(base: str, size: int):

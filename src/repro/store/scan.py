@@ -60,11 +60,16 @@ class Pred:
 
 @dataclasses.dataclass(frozen=True)
 class MaterializedColumn:
-    """One scanned column: physical values (+ dictionary for dict)."""
+    """One scanned column: physical values (+ dictionary for dict).
+
+    ``validity`` is a row-aligned bool array for columns whose chunks
+    carry explicit null bitmaps (True = present); ``None`` when the
+    column has no bitmaps (floats still encode nulls as NaN)."""
 
     ctype: str
     values: np.ndarray
     dictionary: Optional[np.ndarray] = None
+    validity: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -137,8 +142,10 @@ def _to_physical(col: Column, p: Pred):
     import math
 
     if p.op in ("isnull", "notnull"):
-        # only float columns can hold nulls in the store (NaN cells)
-        if col.ctype == "float":
+        # float columns hold nulls as NaN; any ctype may carry explicit
+        # validity bitmaps.  A bitmap-free non-float column decides
+        # trivially.
+        if col.ctype == "float" or col.has_validity():
             return (p.op, None)
         return _NONE if p.op == "isnull" else _ALL
     if p.op == "like":
@@ -304,8 +311,23 @@ def _prune_mask(col: Column, ph) -> np.ndarray:
     return out
 
 
-def _eval_rows(values: np.ndarray, phys) -> np.ndarray:
-    """Exact row mask of one chunk's physical values."""
+def _eval_rows(
+    values: np.ndarray, phys, valid: Optional[np.ndarray] = None
+) -> np.ndarray:
+    """Exact row mask of one chunk's physical values.
+
+    ``valid`` is the chunk's explicit validity bitmap when it has one:
+    null rows then match only ``isnull`` and ``<>`` (the engine's IEEE
+    semantics — NaN satisfies ``<>``), never the ordered comparisons.
+    """
+    if valid is not None:
+        op, _ = phys
+        if op == "isnull":
+            return ~valid
+        if op == "notnull":
+            return valid.copy()
+        base = _eval_rows(values, phys)
+        return (base | ~valid) if op == "<>" else (base & valid)
     op, v = phys
     if op == "isnull":
         return np.isnan(values.astype(np.float64))
@@ -372,6 +394,10 @@ def scan(
             survivors = list(range(n_chunks))
 
     parts: Dict[str, List[np.ndarray]] = {name: [] for name in proj}
+    nullable = {
+        name for name in proj if table.columns[name].has_validity()
+    }
+    vparts: Dict[str, List[np.ndarray]] = {name: [] for name in nullable}
     rows_scanned = 0
     nrows = 0
     any_col = next(iter(table.columns.values()), None)
@@ -385,7 +411,7 @@ def scan(
     for i in survivors:
         mask = None
         for col, ph in phys_preds:
-            m = _eval_rows(col.chunk_physical(i), ph)
+            m = _eval_rows(col.chunk_physical(i), ph, col.chunk_validity(i))
             mask = m if mask is None else (mask & m)
         if mask is not None and bool(mask.all()):
             mask = None  # whole chunk passes: avoid the fancy-index copy
@@ -393,8 +419,14 @@ def scan(
         rows_scanned += chunk_n
         nrows += chunk_n if mask is None else int(mask.sum())
         for name in proj:
-            part = table.columns[name].chunk_physical(i)
+            col = table.columns[name]
+            part = col.chunk_physical(i)
             parts[name].append(part if mask is None else part[mask])
+            if name in nullable:
+                v = col.chunk_validity(i)
+                if v is None:
+                    v = np.ones(col.chunks[i].n, dtype=bool)
+                vparts[name].append(v if mask is None else v[mask])
 
     out: Dict[str, MaterializedColumn] = {}
     for name in proj:
@@ -403,13 +435,106 @@ def scan(
             values = np.concatenate(parts[name])
         else:
             values = _empty_physical(col.ctype, col.encoding)
-        out[name] = MaterializedColumn(col.ctype, values, col.dictionary)
+        valid = None
+        if name in nullable:
+            valid = (
+                np.concatenate(vparts[name])
+                if vparts[name]
+                else np.ones(0, dtype=bool)
+            )
+        out[name] = MaterializedColumn(col.ctype, values, col.dictionary, valid)
     return ScanResult(
         nrows=nrows,
         columns=out,
         chunks_total=n_chunks,
         chunks_skipped=n_chunks - len(survivors),
         rows_scanned=rows_scanned,
+    )
+
+
+# ----------------------------------------------------------------------
+# chunk-at-a-time scanning (the out-of-core pipeline's read primitive)
+# ----------------------------------------------------------------------
+def plan_scan(
+    table: Table,
+    columns: Optional[Sequence[str]] = None,
+    predicates: Sequence[Pred] = (),
+) -> Tuple[List[str], List[Tuple[Column, object]], np.ndarray]:
+    """Plan a scan without materializing anything.
+
+    Returns ``(projection, physical predicates, surviving chunk ids)``
+    — the zone-map pruning half of ``scan``, split out so a streaming
+    consumer (``repro.core.pipeline``) can materialize the survivors
+    one chunk at a time via ``scan_chunk`` instead of all at once.
+    """
+    proj = list(columns) if columns is not None else table.column_names
+    for name in proj:
+        table.column(name)  # raises with a helpful message
+    phys_preds: List[Tuple[Column, object]] = []
+    trivially_empty = False
+    for p in predicates:
+        col = table.column(p.column)
+        ph = _to_physical(col, p)
+        if ph is _ALL:
+            continue
+        if ph is _NONE:
+            trivially_empty = True
+            continue
+        phys_preds.append((col, ph))
+    n_chunks = table.n_chunks
+    if trivially_empty:
+        survivors = np.zeros(0, dtype=np.int64)
+    elif phys_preds:
+        keep = np.ones(n_chunks, dtype=bool)
+        for col, ph in phys_preds:
+            keep &= _prune_mask(col, ph)
+        survivors = np.nonzero(keep)[0]
+    else:
+        survivors = np.arange(n_chunks, dtype=np.int64)
+    return proj, phys_preds, survivors
+
+
+def scan_chunk(
+    table: Table,
+    proj: Sequence[str],
+    phys_preds: Sequence[Tuple[Column, object]],
+    i: int,
+) -> ScanResult:
+    """Materialize ONE chunk of a planned scan (see ``plan_scan``).
+
+    Pure host-side numpy — safe to run on a prefetch thread while the
+    device processes the previous chunk.  Semantics per chunk are
+    identical to ``scan``'s inner loop: exact row masks, validity
+    bitmaps carried through, dictionary codes left encoded.
+    """
+    mask = None
+    for col, ph in phys_preds:
+        m = _eval_rows(col.chunk_physical(i), ph, col.chunk_validity(i))
+        mask = m if mask is None else (mask & m)
+    if mask is not None and bool(mask.all()):
+        mask = None
+    any_col = next(iter(table.columns.values()), None)
+    chunk_n = any_col.chunks[i].n if any_col is not None else 0
+    nrows = chunk_n if mask is None else int(mask.sum())
+    out: Dict[str, MaterializedColumn] = {}
+    for name in proj:
+        col = table.columns[name]
+        part = col.chunk_physical(i)
+        if mask is not None:
+            part = part[mask]
+        valid = None
+        if col.has_validity():
+            v = col.chunk_validity(i)
+            if v is None:
+                v = np.ones(chunk_n, dtype=bool)
+            valid = v if mask is None else v[mask]
+        out[name] = MaterializedColumn(col.ctype, part, col.dictionary, valid)
+    return ScanResult(
+        nrows=nrows,
+        columns=out,
+        chunks_total=1,
+        chunks_skipped=0,
+        rows_scanned=chunk_n,
     )
 
 
@@ -499,9 +624,11 @@ def shared_scan(
             key = (id(col), i, ph)
             got = mask_cache.get(key)
         except TypeError:  # unhashable predicate value: evaluate fresh
-            return _eval_rows(chunk_values(col, i), ph)
+            return _eval_rows(chunk_values(col, i), ph, col.chunk_validity(i))
         if got is None:
-            got = mask_cache[key] = _eval_rows(chunk_values(col, i), ph)
+            got = mask_cache[key] = _eval_rows(
+                chunk_values(col, i), ph, col.chunk_validity(i)
+            )
         return got
 
     any_col = next(iter(table.columns.values()), None)
@@ -509,6 +636,10 @@ def shared_scan(
     for proj, phys_preds, keep in normed:
         survivors = np.nonzero(keep)[0].tolist()
         parts: Dict[str, List[np.ndarray]] = {name: [] for name in proj}
+        nullable = {
+            name for name in proj if table.columns[name].has_validity()
+        }
+        vparts: Dict[str, List[np.ndarray]] = {name: [] for name in nullable}
         rows_scanned = 0
         nrows = 0
         for i in survivors:
@@ -522,8 +653,14 @@ def shared_scan(
             rows_scanned += chunk_n
             nrows += chunk_n if mask is None else int(mask.sum())
             for name in proj:
-                part = chunk_values(table.columns[name], i)
+                col = table.columns[name]
+                part = chunk_values(col, i)
                 parts[name].append(part if mask is None else part[mask])
+                if name in nullable:
+                    v = col.chunk_validity(i)
+                    if v is None:
+                        v = np.ones(col.chunks[i].n, dtype=bool)
+                    vparts[name].append(v if mask is None else v[mask])
         out: Dict[str, MaterializedColumn] = {}
         for name in proj:
             col = table.columns[name]
@@ -531,7 +668,16 @@ def shared_scan(
                 values = np.concatenate(parts[name])
             else:
                 values = _empty_physical(col.ctype, col.encoding)
-            out[name] = MaterializedColumn(col.ctype, values, col.dictionary)
+            valid = None
+            if name in nullable:
+                valid = (
+                    np.concatenate(vparts[name])
+                    if vparts[name]
+                    else np.ones(0, dtype=bool)
+                )
+            out[name] = MaterializedColumn(
+                col.ctype, values, col.dictionary, valid
+            )
         results.append(
             ScanResult(
                 nrows=nrows,

@@ -1,0 +1,259 @@
+"""Spill-to-disk for host-side intermediates under a memory budget.
+
+The out-of-core layer (``repro.core.pipeline``) holds intermediate
+results — per-chunk partial aggregates, buffered probe outputs — as
+host array blocks.  ``SpillManager`` tracks their bytes against
+``CONFIG.memory_budget_bytes`` and, when the pool overflows, evicts the
+least-recently-used blocks to ``.tfb`` v2 chunk files (the store's own
+format, so spilled frames keep zone maps, encodings and validity
+bitmaps).  Access through ``Spillable.get`` transparently re-hydrates
+and re-registers the block as most-recently-used.
+
+Lifecycle: a spill file belongs to its ``Spillable`` — a
+``weakref.finalize`` deletes the directory when the handle is garbage
+collected, and the per-process spill root (used when
+``CONFIG.spill_dir`` is unset) is removed at interpreter exit.
+
+No jax imports: ``repro.store`` stays a host-side layer (CI-enforced).
+"""
+from __future__ import annotations
+
+import atexit
+import itertools
+import os
+import shutil
+import tempfile
+import threading
+import weakref
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+_IDS = itertools.count()
+
+_PROC_DIR: Optional[str] = None
+_PROC_LOCK = threading.Lock()
+
+
+def _process_spill_root() -> str:
+    """Lazily created per-process spill directory, removed atexit."""
+    global _PROC_DIR
+    with _PROC_LOCK:
+        if _PROC_DIR is None:
+            _PROC_DIR = tempfile.mkdtemp(prefix="repro-spill-")
+            atexit.register(shutil.rmtree, _PROC_DIR, ignore_errors=True)
+    return _PROC_DIR
+
+
+def _nbytes(arr: np.ndarray) -> int:
+    if arr.dtype == object:
+        return int(sum(len(str(s).encode()) + 8 for s in arr))
+    return int(arr.nbytes)
+
+
+def block_bytes(
+    data: Dict[str, np.ndarray], validity: Optional[Dict[str, np.ndarray]]
+) -> int:
+    total = sum(_nbytes(a) for a in data.values())
+    if validity:
+        total += sum(_nbytes(a) for a in validity.values())
+    return total
+
+
+def _delete_dir(path: str) -> None:
+    shutil.rmtree(path, ignore_errors=True)
+
+
+class Spillable:
+    """One spillable block: a dict of host arrays (+ validity bitmaps).
+
+    In-memory by default; ``spill()`` persists it as a ``.tfb`` v2
+    directory and drops the arrays; ``get()`` re-hydrates on demand.
+    The spill directory is deleted when the handle is GC'd.
+    """
+
+    def __init__(
+        self,
+        manager: "SpillManager",
+        data: Dict[str, np.ndarray],
+        validity: Optional[Dict[str, np.ndarray]] = None,
+    ):
+        self.id = next(_IDS)
+        self._manager = manager
+        self._data: Optional[Dict[str, np.ndarray]] = dict(data)
+        self._validity: Dict[str, np.ndarray] = dict(validity or {})
+        self.nbytes = block_bytes(data, validity)
+        self._path: Optional[str] = None
+        self._finalizer = None
+
+    @property
+    def spilled(self) -> bool:
+        return self._data is None
+
+    # -- called by the manager (under its lock) ------------------------
+    def _spill_path(self) -> str:
+        root = self._manager.spill_root()
+        return os.path.join(root, f"block-{os.getpid()}-{self.id}.tfb")
+
+    def _do_spill(self) -> int:
+        """Write the block out and free the host arrays; returns bytes
+        written (0 when a previous spill file is still valid — blocks
+        are immutable, so re-hydrated copies can be dropped free)."""
+        if self._data is None:
+            return 0
+        wrote = 0
+        if self._path is None:
+            from . import format as storefmt
+
+            path = self._spill_path()
+            n = max((a.shape[0] for a in self._data.values()), default=0)
+            storefmt.write_arrays(
+                path,
+                self._data,
+                chunk_rows=max(1, n),
+                validity=self._validity or None,
+            )
+            self._path = path
+            self._finalizer = weakref.finalize(self, _delete_dir, path)
+            wrote = self.nbytes
+        self._data = None
+        return wrote
+
+    def _do_load(self) -> None:
+        if self._data is not None:
+            return
+        from . import format as storefmt
+
+        table = storefmt.open_store(self._path)
+        data: Dict[str, np.ndarray] = {}
+        validity: Dict[str, np.ndarray] = {}
+        for name, col in table.columns.items():
+            phys = col.physical()
+            if col.encoding == "dict":
+                phys = col.dictionary[
+                    np.clip(phys, 0, max(0, col.dictionary.shape[0] - 1))
+                ]
+            elif col.ctype == "date":
+                phys = phys.astype("datetime64[D]")
+            elif col.ctype == "bool":
+                phys = phys != 0
+            data[name] = phys
+            v = col.validity()
+            if v is not None:
+                validity[name] = v
+        self._data = data
+        self._validity = validity
+
+    # -- public --------------------------------------------------------
+    def get(self) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+        """(data, validity), re-hydrating from disk when spilled."""
+        return self._manager.touch(self)
+
+    def release(self) -> None:
+        """Stop tracking this block (arrays stay as they are)."""
+        self._manager.unregister(self)
+
+
+class SpillManager:
+    """LRU byte-budget tracker over registered ``Spillable`` blocks.
+
+    The budget is read from ``CONFIG.memory_budget_bytes`` at every
+    enforcement point, so tests and the serving layer can flip it at
+    runtime.  ``None`` disables spilling (blocks are still tracked, so
+    ``peak_tracked_bytes`` stays observable).
+    """
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._lru: "OrderedDict[int, Spillable]" = OrderedDict()
+        self.counters = {
+            "bytes_spilled": 0,
+            "bytes_reread": 0,
+            "evictions": 0,
+            "peak_tracked_bytes": 0,
+        }
+
+    # -- config --------------------------------------------------------
+    @staticmethod
+    def budget() -> Optional[int]:
+        from repro.core.config import CONFIG
+
+        return CONFIG.memory_budget_bytes
+
+    @staticmethod
+    def spill_root() -> str:
+        from repro.core.config import CONFIG
+
+        if CONFIG.spill_dir:
+            os.makedirs(CONFIG.spill_dir, exist_ok=True)
+            return CONFIG.spill_dir
+        return _process_spill_root()
+
+    # -- introspection -------------------------------------------------
+    def tracked_bytes(self) -> int:
+        with self._lock:
+            return sum(
+                s.nbytes for s in self._lru.values() if not s.spilled
+            )
+
+    def reset_counters(self) -> None:
+        with self._lock:
+            for k in self.counters:
+                self.counters[k] = 0
+
+    # -- registration / LRU --------------------------------------------
+    def register(
+        self,
+        data: Dict[str, np.ndarray],
+        validity: Optional[Dict[str, np.ndarray]] = None,
+    ) -> Spillable:
+        s = Spillable(self, data, validity)
+        with self._lock:
+            self._lru[s.id] = s
+            self._note_peak()
+            self._enforce(keep=s)
+        return s
+
+    def unregister(self, s: Spillable) -> None:
+        with self._lock:
+            self._lru.pop(s.id, None)
+
+    def touch(self, s: Spillable):
+        with self._lock:
+            reread = s.spilled
+            s._do_load()
+            if reread:
+                self.counters["bytes_reread"] += s.nbytes
+            if s.id in self._lru:
+                self._lru.move_to_end(s.id)
+            self._note_peak()
+            self._enforce(keep=s)
+            return s._data, s._validity
+
+    def _note_peak(self) -> None:
+        t = sum(s.nbytes for s in self._lru.values() if not s.spilled)
+        if t > self.counters["peak_tracked_bytes"]:
+            self.counters["peak_tracked_bytes"] = t
+
+    def _enforce(self, keep: Optional[Spillable] = None) -> None:
+        budget = self.budget()
+        if budget is None:
+            return
+        resident = [s for s in self._lru.values() if not s.spilled]
+        total = sum(s.nbytes for s in resident)
+        for s in resident:  # LRU order (OrderedDict insertion/touch)
+            if total <= budget:
+                break
+            if keep is not None and s.id == keep.id:
+                continue
+            wrote = s._do_spill()
+            self.counters["bytes_spilled"] += wrote
+            self.counters["evictions"] += 1
+            total -= s.nbytes
+        # the kept block alone may still overflow the budget — that's
+        # fine, a block must be resident to be usable at all
+
+
+#: process-wide manager (the out-of-core layer's single pool)
+SPILL = SpillManager()

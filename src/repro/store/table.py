@@ -69,9 +69,17 @@ class Chunk:
     ``payload`` is the encoded representation: a values array (plain /
     dict codes) or a ``(values, run_lengths)`` pair (rle).  A lazy chunk
     holds a zero-arg ``loader`` instead and caches its result.
+
+    ``validity`` is an optional row-aligned bool array (True = value
+    present); ``None`` means every row is valid — except float columns,
+    where NaN cells stay the legacy null encoding.  Validity makes
+    int/date/bool/str nulls first-class in the store (they previously
+    survived only as float NaN), so spilled engine intermediates
+    round-trip losslessly.  ``vloader`` defers the validity read (the
+    ``.tfb`` v2 ``<col>.valid`` file).
     """
 
-    __slots__ = ("n", "stats", "_payload", "_loader")
+    __slots__ = ("n", "stats", "_payload", "_loader", "_validity", "_vloader")
 
     def __init__(
         self,
@@ -79,6 +87,8 @@ class Chunk:
         stats: ChunkStats,
         payload=None,
         loader: Optional[Callable[[], object]] = None,
+        validity: Optional[np.ndarray] = None,
+        vloader: Optional[Callable[[], np.ndarray]] = None,
     ):
         if (payload is None) == (loader is None):
             raise ValueError("chunk needs exactly one of payload/loader")
@@ -86,6 +96,8 @@ class Chunk:
         self.stats = stats
         self._payload = payload
         self._loader = loader
+        self._validity = validity
+        self._vloader = vloader
 
     @property
     def loaded(self) -> bool:
@@ -95,6 +107,12 @@ class Chunk:
         if self._payload is None:
             self._payload = self._loader()
         return self._payload
+
+    def validity(self) -> Optional[np.ndarray]:
+        """Row-aligned bool validity (None = all rows valid)."""
+        if self._validity is None and self._vloader is not None:
+            self._validity = self._vloader()
+        return self._validity
 
 
 class Column:
@@ -212,6 +230,30 @@ class Column:
             return np.repeat(values, runs)
         return c.payload()
 
+    def chunk_validity(self, i: int) -> Optional[np.ndarray]:
+        """Row-aligned validity of chunk ``i`` (None = all valid)."""
+        return self.chunks[i].validity()
+
+    def has_validity(self) -> bool:
+        """Does any chunk carry an explicit validity bitmap?
+
+        Answered from the chunk objects (payload/validity stay on disk
+        for lazy columns: persisted validity always pairs a vloader)."""
+        return any(
+            c._validity is not None or c._vloader is not None
+            for c in self.chunks
+        )
+
+    def validity(self) -> Optional[np.ndarray]:
+        """All chunks' validity, concatenated (None = no bitmaps)."""
+        if not self.has_validity():
+            return None
+        parts = []
+        for c in self.chunks:
+            v = c.validity()
+            parts.append(np.ones(c.n, dtype=bool) if v is None else v)
+        return np.concatenate(parts) if parts else np.ones(0, dtype=bool)
+
     def ensure_loaded(self) -> None:
         """Populate every chunk's payload, preferring one sequential
         bulk read over per-chunk seeks when nothing is loaded yet."""
@@ -255,17 +297,25 @@ def _empty_physical(ctype: str, encoding: str) -> np.ndarray:
 # ----------------------------------------------------------------------
 # statistics + encoding policy
 # ----------------------------------------------------------------------
-def compute_stats(physical: np.ndarray, ctype: str) -> ChunkStats:
+def compute_stats(
+    physical: np.ndarray, ctype: str, validity: Optional[np.ndarray] = None
+) -> ChunkStats:
     """Zone-map stats of one chunk's physical values.
 
     Nulls are NaN in float columns (the engine's convention); other
-    ctypes are non-nullable in the store format.
+    ctypes hold nulls through an explicit ``validity`` bitmap (True =
+    present).  Stats cover the non-null values only.
     """
     n = physical.shape[0]
     if ctype == "float":
         mask = ~np.isnan(physical.astype(np.float64))
+        if validity is not None:
+            mask &= validity
         nn = physical[mask]
         nulls = n - int(mask.sum())
+    elif validity is not None:
+        nn = physical[validity]
+        nulls = n - int(validity.sum())
     else:
         nn = physical
         nulls = 0
@@ -345,15 +395,21 @@ class Table:
         chunk_rows: int = DEFAULT_CHUNK_ROWS,
         policy: EncodingPolicy = DEFAULT_POLICY,
         encode: Optional[Dict[str, str]] = None,
+        validity: Optional[Dict[str, np.ndarray]] = None,
     ) -> "Table":
         """Chunk + encode a dict of host arrays.
 
         ``encode`` forces an encoding per column name ('plain' | 'dict'
-        | 'rle'), overriding the policy.
+        | 'rle'), overriding the policy.  ``validity`` maps column name
+        -> row-aligned bool array (True = present) for nullable non-
+        float columns; null cells' payload values are kept verbatim
+        (callers pass an in-domain sentinel), the bitmap is
+        authoritative.
         """
         if chunk_rows <= 0:
             raise ValueError("chunk_rows must be positive")
         encode = encode or {}
+        validity = validity or {}
         columns: Dict[str, Column] = {}
         n = None
         for name, arr in data.items():
@@ -362,8 +418,15 @@ class Table:
                 n = arr.shape[0]
             elif arr.shape[0] != n:
                 raise ValueError(f"column {name}: length {arr.shape[0]} != {n}")
+            valid = validity.get(name)
+            if valid is not None:
+                valid = np.asarray(valid, dtype=bool)
+                if valid.shape[0] != arr.shape[0]:
+                    raise ValueError(f"column {name}: validity length mismatch")
+                if bool(valid.all()):
+                    valid = None  # all-valid bitmap: store nothing
             columns[name] = _build_column(
-                name, arr, chunk_rows, policy, encode.get(name)
+                name, arr, chunk_rows, policy, encode.get(name), valid
             )
         return Table(columns, 0 if n is None else n, chunk_rows)
 
@@ -463,6 +526,7 @@ def _build_column(
     chunk_rows: int,
     policy: EncodingPolicy,
     forced: Optional[str],
+    valid: Optional[np.ndarray] = None,
 ) -> Column:
     phys, ctype = _normalize(arr)
     encoding = forced if forced is not None else policy.choose(phys, ctype)
@@ -483,12 +547,19 @@ def _build_column(
         part = phys[lo: lo + chunk_rows]
         if part.shape[0] == 0 and phys.shape[0] != 0:
             break
-        stats = compute_stats(part, stats_ctype)
+        vpart = None
+        if valid is not None:
+            vpart = valid[lo: lo + chunk_rows]
+            if bool(vpart.all()):
+                vpart = None  # chunk without nulls: no bitmap
+        stats = compute_stats(part, stats_ctype, vpart)
         if encoding == "rle":
             payload = _rle_encode(part)
         else:
             payload = part
-        chunks.append(Chunk(part.shape[0], stats, payload=payload))
+        chunks.append(
+            Chunk(part.shape[0], stats, payload=payload, validity=vpart)
+        )
         if phys.shape[0] == 0:
             break
     return Column(name, ctype, encoding, chunks, dictionary)
