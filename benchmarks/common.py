@@ -3,40 +3,99 @@
 Output contract (benchmarks/run.py): CSV lines ``name,us_per_call,derived``
 on stdout; ``write_json(path)`` additionally dumps the collected rows as
 a JSON document (used by the CI bench-smoke job's artifact).
+
+Every ``measure()`` also captures an observability profile for the row
+it feeds: the ``repro.obs.metrics`` counter diff across the timed
+repeats (free — two jax-free snapshots), and, when
+``REPRO_BENCH_PROFILE=1`` is set and the workload is fast enough, a
+per-operator wall-time breakdown from one *extra* traced call after
+timing finishes.  The timed region itself always runs with whatever
+``CONFIG.tracing`` the suite configured (default: off), so profiles
+never contaminate the numbers the regression gate compares.
 """
 from __future__ import annotations
 
 import functools
 import gc
 import json
+import os
 import platform
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 ROWS = []
+
+#: Profile captured by the most recent ``measure()`` call; ``report``
+#: consumes (and clears) it, attaching it to the row it records.
+LAST_PROFILE: Optional[dict] = None
+
+#: Skip the extra traced profiling call for workloads slower than this
+#: (seconds) — the breakdown is not worth doubling a slow bench's cost.
+_PROFILE_BUDGET_S = 2.0
 
 
 def measure(fn: Callable, *, repeats: int = 3, warmup: int = 1) -> float:
     """Median wall seconds per call."""
+    global LAST_PROFILE
+    from repro.obs import metrics
+
     for _ in range(warmup):
         fn()
+    before = metrics.snapshot()
     times = []
     for _ in range(repeats):
         gc.collect()
         t0 = time.perf_counter()
         fn()
         times.append(time.perf_counter() - t0)
+    counters = metrics.diff(before, metrics.snapshot())
     times.sort()
-    return times[len(times) // 2]
+    med = times[len(times) // 2]
+    profile = {"counters": counters, "repeats": repeats}
+    if os.environ.get("REPRO_BENCH_PROFILE") and med < _PROFILE_BUDGET_S:
+        profile.update(_traced_profile(fn))
+    LAST_PROFILE = profile
+    return med
+
+
+def _traced_profile(fn: Callable) -> dict:
+    """One extra call under ``CONFIG.tracing='on'``: per-operator wall
+    time aggregated from the recorded spans.  Outside the timed region."""
+    from repro import obs
+    from repro.core.config import CONFIG
+
+    saved = CONFIG.tracing
+    if saved == "off":
+        CONFIG.tracing = "on"
+    mark = obs.mark_ns()
+    try:
+        fn()
+    except Exception:
+        return {}
+    finally:
+        CONFIG.tracing = saved
+    records = obs.spans(since_ns=mark)
+    return {
+        "operators": obs.aggregate_operators(records),
+        "spans_recorded": len(records),
+    }
 
 
 def report(name: str, seconds: float, derived: str = "") -> None:
-    ROWS.append((name, seconds * 1e6, derived))
+    global LAST_PROFILE
+    profile, LAST_PROFILE = LAST_PROFILE, None
+    ROWS.append((name, seconds * 1e6, derived, profile))
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
 
 
 def write_json(path: str) -> None:
     """Dump every reported row (plus host metadata) as JSON."""
+    rows = []
+    for name, us, derived, profile in ROWS:
+        row = {"name": name, "us_per_call": us, "derived": derived}
+        if profile:
+            row["profile"] = profile
+        rows.append(row)
     doc = {
         "schema": "repro-bench/v1",
         "host": {
@@ -44,10 +103,7 @@ def write_json(path: str) -> None:
             "python": platform.python_version(),
         },
         "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
-        "rows": [
-            {"name": name, "us_per_call": us, "derived": derived}
-            for name, us, derived in ROWS
-        ],
+        "rows": rows,
     }
     with open(path, "w") as fh:
         json.dump(doc, fh, indent=2, sort_keys=True)
@@ -70,9 +126,9 @@ def compare_baseline(path: str, *, factor: float = 2.5, min_us: float = 500.0) -
     offenders = []
     # a crashed suite would otherwise produce no comparable rows and
     # sail through the gate (and poison the next baseline refresh)
-    crashed = [name for name, _, _ in ROWS if "SUITE_ERROR" in name]
+    crashed = [name for name, _, _, _ in ROWS if "SUITE_ERROR" in name]
     compared = 0
-    for name, us, _ in ROWS:
+    for name, us, _, _ in ROWS:
         b = base.get(name)
         if b is None or b <= 0 or "SUITE_ERROR" in name:
             continue

@@ -81,6 +81,13 @@ class EngineConfig:
     # Merge accumulated per-chunk partial aggregates every N chunks
     # (bounds the partial pool even when the budget is unbounded).
     ooc_merge_every: int = 8
+    # Span tracing (repro.obs): 'off' = no spans (one branch, no
+    # allocation on every instrumented path), 'on' = operator-level
+    # spans (plan nodes, join algorithm picks, compile phases, serve
+    # batch phases, spill events), 'detailed' = additionally per-chunk
+    # spans (chunk decode, prefetch waits, per-chunk probes/merges).
+    # EXPLAIN ANALYZE flips this to 'on' for the analyzed execution.
+    tracing: str = "off"
 
 
 CONFIG = EngineConfig()

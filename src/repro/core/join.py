@@ -40,6 +40,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from . import encoding
 from .config import CONFIG
 from .frame import (
@@ -70,6 +71,9 @@ STATS = {
 def reset_stats() -> None:
     for k in STATS:
         STATS[k] = 0
+
+
+obs.metrics.register_group("core.join", lambda: dict(STATS), reset_stats)
 
 
 def _as_list(x) -> List[str]:
@@ -511,7 +515,14 @@ def join(
             rcodes = jnp.where(v, rcodes, np.int64(-2))
 
     if how in ("semi", "anti"):
-        exists = _membership_routed(lcodes, rcodes)
+        with obs.span(
+            "core.join",
+            how=how,
+            algorithm="membership",
+            probe_rows=left.nrows,
+            build_rows=right.nrows,
+        ):
+            exists = _membership_routed(lcodes, rcodes)
         return left.mask_rows(exists if how == "semi" else ~exists)
     if how not in ("inner", "left"):
         raise ValueError(f"unsupported join type {how!r}")
@@ -522,7 +533,14 @@ def join(
     nb = right.nrows
     matched_counts = None
     if algorithm == "sortmerge":
-        lrows, rrows = sort_merge_join_rows(lcodes, rcodes)
+        with obs.span(
+            "core.join",
+            how=how,
+            algorithm="sort_merge",
+            probe_rows=left.nrows,
+            build_rows=nb,
+        ):
+            lrows, rrows = sort_merge_join_rows(lcodes, rcodes)
     else:
         unique_build = False
         if algorithm in ("auto", "direct") and nb > 0:
@@ -544,12 +562,26 @@ def join(
                     right.set_stats(
                         list(right_on), unique=unique_build, distinct=m_build
                     )
-        if unique_build and algorithm != "sorted":
-            matched, lrows, rrows = direct_address_rows(lcodes, rcodes, domain)
-            matched_counts = matched.astype(INT)
-        else:
-            counts, lrows, rrows = sorted_probe_rows(lcodes, rcodes)
-            matched_counts = counts
+        algo = (
+            "direct_address"
+            if unique_build and algorithm != "sorted"
+            else "sorted_probe"
+        )
+        with obs.span(
+            "core.join",
+            how=how,
+            algorithm=algo,
+            probe_rows=left.nrows,
+            build_rows=nb,
+        ):
+            if algo == "direct_address":
+                matched, lrows, rrows = direct_address_rows(
+                    lcodes, rcodes, domain
+                )
+                matched_counts = matched.astype(INT)
+            else:
+                counts, lrows, rrows = sorted_probe_rows(lcodes, rcodes)
+                matched_counts = counts
 
     inner = _hstack(left.take(lrows), right.take(rrows), name_map)
     if how == "inner":

@@ -72,6 +72,16 @@ def sync_spill_stats() -> None:
     STATS.update(SPILL.counters)
 
 
+def _stats_snapshot() -> Dict:
+    sync_spill_stats()
+    return dict(STATS)
+
+
+from repro import obs as _obs  # noqa: E402
+
+_obs.metrics.register_group("core.pipeline", _stats_snapshot, reset_stats)
+
+
 _INT_DOMAIN = ("int", "date", "bool")
 
 
@@ -105,9 +115,13 @@ class ChunkScan:
         depth = max(0, int(CONFIG.ooc_prefetch))
         if depth == 0 or len(self.survivors) <= 1:
             for i in self.survivors:
-                yield int(i), _store.scan_chunk(
-                    self.table, self.proj, self.phys_preds, int(i)
-                )
+                with _obs.detailed_span(
+                    "pipeline.chunk_decode", chunk=int(i)
+                ):
+                    res = _store.scan_chunk(
+                        self.table, self.proj, self.phys_preds, int(i)
+                    )
+                yield int(i), res
             return
         q: "queue.Queue" = queue.Queue(maxsize=depth)
         DONE = object()
@@ -130,9 +144,12 @@ class ChunkScan:
                 for i in self.survivors:
                     if stop.is_set():
                         return
-                    res = _store.scan_chunk(
-                        self.table, self.proj, self.phys_preds, int(i)
-                    )
+                    with _obs.detailed_span(
+                        "pipeline.chunk_decode", chunk=int(i)
+                    ):
+                        res = _store.scan_chunk(
+                            self.table, self.proj, self.phys_preds, int(i)
+                        )
                     if not put((int(i), res)):
                         return
             except BaseException as e:  # re-raised on the consumer side
@@ -144,7 +161,8 @@ class ChunkScan:
         t.start()
         try:
             while True:
-                item = q.get()
+                with _obs.detailed_span("pipeline.prefetch_wait"):
+                    item = q.get()
                 if item is DONE:
                     break
                 if isinstance(item, BaseException):
@@ -298,6 +316,12 @@ class HashBuild:
 
     # -- the probe ------------------------------------------------------
     def apply(self, f: TensorFrame) -> TensorFrame:
+        with _obs.detailed_span(
+            "pipeline.probe_chunk", rows=f.nrows, how=self.how
+        ):
+            return self._apply(f)
+
+    def _apply(self, f: TensorFrame) -> TensorFrame:
         if self._fast is not None:
             codes = self._probe_codes(f)
             if codes is not None:
@@ -406,7 +430,8 @@ class StreamAgg:
         if not self.key_names:
             self._add_scalar(f)
             return
-        part = f.groupby(self.key_names).agg(self.partials)
+        with _obs.detailed_span("pipeline.partial_agg", rows=f.nrows):
+            part = f.groupby(self.key_names).agg(self.partials)
         self._pending.append(SPILL.register(self._partial_block(part)))
         if len(self._pending) >= max(2, int(CONFIG.ooc_merge_every)):
             self._merge()
@@ -414,28 +439,30 @@ class StreamAgg:
     def _merge(self) -> None:
         if not self._pending and self._merged is None:
             return
-        blocks = []
-        handles = list(self._pending)
-        if self._merged is not None:
-            handles.append(self._merged)
-        for h in handles:
-            data, _ = h.get()
-            blocks.append(data)
-            h.release()
-        if len(blocks) == 1:
-            cat = blocks[0]
-        else:
-            cat = {
-                name: np.concatenate([b[name] for b in blocks])
-                for name in self._order
-            }
-        mf = TensorFrame.from_arrays(cat)
-        merged = mf.groupby(self.key_names).agg(self._merge_specs)
-        from repro.store.spill import SPILL
+        with _obs.span("pipeline.merge_partials") as sp:
+            blocks = []
+            handles = list(self._pending)
+            if self._merged is not None:
+                handles.append(self._merged)
+            sp.set(partials=len(handles))
+            for h in handles:
+                data, _ = h.get()
+                blocks.append(data)
+                h.release()
+            if len(blocks) == 1:
+                cat = blocks[0]
+            else:
+                cat = {
+                    name: np.concatenate([b[name] for b in blocks])
+                    for name in self._order
+                }
+            mf = TensorFrame.from_arrays(cat)
+            merged = mf.groupby(self.key_names).agg(self._merge_specs)
+            from repro.store.spill import SPILL
 
-        self._merged = SPILL.register(self._partial_block(merged))
-        self._pending = []
-        STATS["partial_merges"] += 1
+            self._merged = SPILL.register(self._partial_block(merged))
+            self._pending = []
+            STATS["partial_merges"] += 1
 
     # -- keyless path ---------------------------------------------------
     def _add_scalar(self, f: TensorFrame) -> None:

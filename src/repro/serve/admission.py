@@ -72,6 +72,8 @@ class AdmissionQueue:
     def _drain(self, block: bool) -> List:
         """Pull one micro-batch: first item (optionally blocking), then
         whatever lands inside the straggler window, up to the cap."""
+        from repro import obs
+
         batch: List = []
         try:
             first = self._q.get(block=block, timeout=0.2 if block else None)
@@ -81,19 +83,23 @@ class AdmissionQueue:
             raise StopIteration
         batch.append(first)
         cap = max(1, int(CONFIG.serve_max_batch))
-        deadline = time.monotonic() + CONFIG.serve_batch_window_ms / 1e3
-        while len(batch) < cap:
-            remaining = deadline - time.monotonic()
-            try:
-                item = self._q.get(
-                    block=remaining > 0, timeout=max(remaining, 0) or None
-                )
-            except queue.Empty:
-                break
-            if item is _CLOSED:
-                self._q.put(_CLOSED)  # leave the sentinel for the loop
-                break
-            batch.append(item)
+        # the straggler wait is deliberate batching latency, not work —
+        # its own span keeps it distinguishable in traces
+        with obs.span("serve.batch_assembly") as sp:
+            deadline = time.monotonic() + CONFIG.serve_batch_window_ms / 1e3
+            while len(batch) < cap:
+                remaining = deadline - time.monotonic()
+                try:
+                    item = self._q.get(
+                        block=remaining > 0, timeout=max(remaining, 0) or None
+                    )
+                except queue.Empty:
+                    break
+                if item is _CLOSED:
+                    self._q.put(_CLOSED)  # leave the sentinel for the loop
+                    break
+                batch.append(item)
+            sp.set(batch=len(batch))
         return batch
 
     def drain_once(self) -> int:

@@ -185,26 +185,33 @@ class Executor:
 
     # -- batch execution (admission worker thread) -----------------------
     def _run_batch(self, batch: List[_Request]) -> None:
+        from repro import obs
         from repro.sql import compile as _compile
 
-        frames = self._frames  # one snapshot for the whole batch
-        groups = self._coalesce(batch)
-        live = self._plan_batch(groups, frames)
-        scan_cache = self._share_scans(live, frames)
+        t_start = time.perf_counter()
+        for req in batch:  # queue phase: submit -> batch start
+            STATS.record_phase("queue", t_start - req.t_submit)
 
-        STATS.bump(batches=1)
-        if len(batch) >= 2:
-            STATS.bump(batched_queries=len(batch))
+        with obs.span("serve.batch", size=len(batch)):
+            frames = self._frames  # one snapshot for the whole batch
+            groups = self._coalesce(batch)
+            live = self._plan_batch(groups, frames)
+            with obs.span("serve.shared_scan"):
+                scan_cache = self._share_scans(live, frames)
 
-        # dispatch grouped by parameterized plan shape: same-shape
-        # members run back-to-back as compiled-cache hits
-        live.sort(key=lambda g: g[0].shape_key)
-        hits_before = _compile.STATS["hits"]
-        for group in live:
-            self._run_group(group, frames, scan_cache)
-        with_hits = _compile.STATS["hits"] - hits_before
-        if with_hits > 0:
-            STATS.bump(plan_cache_hits=with_hits)
+            STATS.bump(batches=1)
+            if len(batch) >= 2:
+                STATS.bump(batched_queries=len(batch))
+
+            # dispatch grouped by parameterized plan shape: same-shape
+            # members run back-to-back as compiled-cache hits
+            live.sort(key=lambda g: g[0].shape_key)
+            hits_before = _compile.STATS["hits"]
+            for group in live:
+                self._run_group(group, frames, scan_cache)
+            with_hits = _compile.STATS["hits"] - hits_before
+            if with_hits > 0:
+                STATS.bump(plan_cache_hits=with_hits)
 
     def _coalesce(self, batch: List[_Request]) -> List[List[_Request]]:
         """Group identical (text, UDF environment) requests: each group
@@ -235,11 +242,14 @@ class Executor:
         from repro.sql.udf import udf_scope
         from repro.store import Table as StoreTable
 
+        from repro import obs
+
         live: List[List[_Request]] = []
         for group in groups:
             req = group[0]
+            t0 = time.perf_counter()
             try:
-                with udf_scope(req.udfs):
+                with obs.span("serve.plan"), udf_scope(req.udfs):
                     req.plan = sql.plan_query(
                         req.text, frames, optimized=True
                     )
@@ -255,6 +265,8 @@ class Executor:
                 for member in group:
                     member.future.set_exception(e)
                 continue
+            finally:
+                STATS.record_phase("plan", time.perf_counter() - t0)
             live.append(group)
         return live
 
@@ -298,10 +310,22 @@ class Executor:
             )
         return scan_cache
 
+    @staticmethod
+    def _compile_seconds() -> float:
+        """Cumulative trace+compile seconds the compiled path has spent
+        (deltas around a group attribute its compile cost)."""
+        from repro.sql import compile as _compile
+
+        with _compile._LOCK:
+            return sum(
+                r["trace_s"] + r["compile_s"]
+                for r in _compile.STATS["plans"].values()
+            )
+
     def _run_group(
         self, group: List[_Request], frames: Dict, scan_cache: Dict
     ) -> None:
-        from repro import sql
+        from repro import obs, sql
         from repro.sql.udf import udf_scope
 
         req = group[0]
@@ -310,14 +334,25 @@ class Executor:
             if scan_cache and any(k in scan_cache for k in req.scan_keys)
             else None
         )
+        t0 = time.perf_counter()
+        c0 = self._compile_seconds()
         try:
-            with udf_scope(req.udfs):
+            with obs.span("serve.execute", queries=len(group)), udf_scope(
+                req.udfs
+            ):
                 out = sql.execute_plan(req.plan, frames, scan_cache=cache)
         except Exception as e:
             STATS.bump(errors=len(group))
             for member in group:
                 member.future.set_exception(e)
             return
+        finally:
+            compile_s = max(self._compile_seconds() - c0, 0.0)
+            STATS.record_phase("compile", compile_s)
+            STATS.record_phase(
+                "execute",
+                max(time.perf_counter() - t0 - compile_s, 0.0),
+            )
         if req.udfs:
             STATS.bump(udf_queries=1)
         for member in group:

@@ -33,6 +33,24 @@ def _fresh() -> Dict[str, int]:
     }
 
 
+#: Per-query latency decomposition recorded by the executor: time in
+#: the admission queue, batch planning, compiled-path trace+compile,
+#: and engine execution.
+PHASES = ("queue", "plan", "compile", "execute")
+
+
+def _quantiles(lat: List[float], points: Dict[str, float]) -> Dict[str, float]:
+    lat = sorted(lat)
+    if not lat:
+        return {name: 0.0 for name in points}
+
+    def q(p: float) -> float:
+        i = min(len(lat) - 1, int(p * (len(lat) - 1) + 0.5))
+        return lat[i] * 1e3
+
+    return {name: q(p) for name, p in points.items()}
+
+
 class ServeStats:
     """Counters + latency reservoir for the serving layer."""
 
@@ -40,31 +58,53 @@ class ServeStats:
         self._lock = threading.Lock()
         self._counts = _fresh()
         self._lat: List[float] = []  # seconds, bounded reservoir
+        self._phase: Dict[str, List[float]] = {p: [] for p in PHASES}
 
     def bump(self, **deltas: int) -> None:
         with self._lock:
             for k, d in deltas.items():
                 self._counts[k] += d
 
+    @staticmethod
+    def _push(lat: List[float], seconds: float) -> None:
+        if len(lat) >= _RESERVOIR:
+            # drop the oldest half; percentiles stay recent-biased
+            del lat[: _RESERVOIR // 2]
+        lat.append(float(seconds))
+
     def record_latency(self, seconds: float) -> None:
         with self._lock:
-            if len(self._lat) >= _RESERVOIR:
-                # drop the oldest half; percentiles stay recent-biased
-                del self._lat[: _RESERVOIR // 2]
-            self._lat.append(float(seconds))
+            self._push(self._lat, seconds)
+
+    def record_phase(self, phase: str, seconds: float) -> None:
+        """Record one query's time in an admission/execution phase
+        (``PHASES``); each phase keeps its own percentile reservoir."""
+        with self._lock:
+            self._push(self._phase[phase], seconds)
 
     def percentiles(self) -> Dict[str, float]:
-        """p50/p90/p99 end-to-end latency in milliseconds."""
+        """p50/p90/p95/p99 end-to-end latency in milliseconds."""
         with self._lock:
-            lat = sorted(self._lat)
-        if not lat:
-            return {"p50_ms": 0.0, "p90_ms": 0.0, "p99_ms": 0.0}
+            lat = list(self._lat)
+        return _quantiles(
+            lat, {"p50_ms": 0.50, "p90_ms": 0.90, "p95_ms": 0.95,
+                  "p99_ms": 0.99}
+        )
 
-        def q(p: float) -> float:
-            i = min(len(lat) - 1, int(p * (len(lat) - 1) + 0.5))
-            return lat[i] * 1e3
-
-        return {"p50_ms": q(0.50), "p90_ms": q(0.90), "p99_ms": q(0.99)}
+    def phase_percentiles(self) -> Dict[str, Dict[str, float]]:
+        """Per-phase p50/p95/p99 (ms): where a served query's latency
+        goes — queueing, planning, compiling, or executing."""
+        with self._lock:
+            phases = {p: list(lat) for p, lat in self._phase.items()}
+        return {
+            p: dict(
+                _quantiles(
+                    lat, {"p50_ms": 0.50, "p95_ms": 0.95, "p99_ms": 0.99}
+                ),
+                count=len(lat),
+            )
+            for p, lat in phases.items()
+        }
 
     def snapshot(self) -> Dict:
         with self._lock:
@@ -72,12 +112,14 @@ class ServeStats:
             n = len(self._lat)
         out["latencies_recorded"] = n
         out.update(self.percentiles())
+        out["phases"] = self.phase_percentiles()
         return out
 
     def reset(self) -> None:
         with self._lock:
             self._counts = _fresh()
             self._lat = []
+            self._phase = {p: [] for p in PHASES}
 
     def __getitem__(self, key: str) -> int:
         with self._lock:
@@ -85,3 +127,7 @@ class ServeStats:
 
 
 STATS = ServeStats()
+
+from repro import obs as _obs  # noqa: E402
+
+_obs.metrics.register_group("serve", STATS.snapshot, STATS.reset)

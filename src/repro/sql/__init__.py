@@ -53,7 +53,7 @@ def plan_query(query: str, scope: Dict, *, optimized: bool = True):
     return plan
 
 
-def execute(query: str, scope: Dict, *, optimize: bool = True):
+def execute(query: str, scope: Dict, *, optimize: bool = True, explain=None):
     """Run a SQL ``SELECT`` over a scope of TensorFrames/store tables.
 
     Returns a TensorFrame (aggregate-only queries yield one row).
@@ -61,9 +61,27 @@ def execute(query: str, scope: Dict, *, optimize: bool = True):
     scan pushdown and projection pruning, but still decorrelates
     subqueries — the TensorFrame backend has no interpreted-subquery
     path (only the oracle backend interprets markers, row at a time).
+
+    ``explain="analyze"`` executes the optimized plan op-by-op with
+    span tracing forced on and returns an ``analyze.AnalyzeResult``:
+    the result frame plus the plan tree annotated with per-operator
+    wall time, row counts, bytes materialized and — for joins — the
+    algorithm the stats-driven picker chose.  The compiled whole-plan
+    path is bypassed (one fused program has no per-operator
+    boundaries), so analyzed timings attribute work but are not
+    production latencies.
     """
     frames = scope_frames(scope)
     plan = plan_query(query, frames, optimized=False)
+    if explain is not None:
+        if explain != "analyze":
+            raise SqlError(
+                f"unsupported explain mode {explain!r} (expected 'analyze')"
+            )
+        from .analyze import run_analyze
+
+        plan = _optimize(plan, store_tables=store_table_names(frames))
+        return run_analyze(plan, frames)
     if optimize:
         plan = _optimize(plan, store_tables=store_table_names(frames))
         return execute_plan(plan, frames)

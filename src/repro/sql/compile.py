@@ -46,6 +46,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.config import CONFIG
 from repro.core.expr import Expr, Value
 from repro.core.frame import (
@@ -139,6 +140,16 @@ def reset_stats() -> None:
     with _LOCK:
         STATS.clear()
         STATS.update(_fresh_stats())
+
+
+def _stats_snapshot() -> Dict:
+    with _LOCK:
+        out = {k: v for k, v in STATS.items() if k != "plans"}
+        out["plans"] = {d: dict(r) for d, r in STATS["plans"].items()}
+    return out
+
+
+obs.metrics.register_group("sql.compile", _stats_snapshot, reset_stats)
 
 
 def clear_cache() -> None:
@@ -1562,9 +1573,11 @@ def _compile_entry(fpr, pplan, preps, order, kinds, args):
         # CPU backends cannot honor every donation; that is fine
         warnings.simplefilter("ignore")
         t0 = time.perf_counter()
-        lowered = fn.lower(*args)
+        with obs.span("sql.compile.trace", fingerprint=fpr[:80]):
+            lowered = fn.lower(*args)
         t1 = time.perf_counter()
-        compiled = lowered.compile()
+        with obs.span("sql.compile.compile"):
+            compiled = lowered.compile()
         t2 = time.perf_counter()
     digest = hashlib.sha1(fpr.encode()).hexdigest()[:12]
     return _Entry(
@@ -1700,6 +1713,7 @@ def maybe_execute_compiled(plan, frames) -> Optional[TensorFrame]:
     slots, n_i, n_f = _param_slots(kinds)
     args = _build_args(preps, tables, values, slots, n_i, n_f)
 
+    cache_hit = entry is not None
     if entry is None:
         with tlock:
             entry = _maybe_compile(fpr, pplan, preps, tables, kinds, args)
@@ -1712,8 +1726,12 @@ def maybe_execute_compiled(plan, frames) -> Optional[TensorFrame]:
     with warnings.catch_warnings():
         # CPU backends cannot honor every donation; that is fine
         warnings.simplefilter("ignore")
-        it, ft, n_out = entry.compiled(*args)
-    n = int(n_out)
+        with obs.span(
+            "sql.compile.execute", digest=entry.digest, cache_hit=cache_hit
+        ) as sp:
+            it, ft, n_out = entry.compiled(*args)
+            n = int(n_out)  # host sync: the program really ran
+            sp.set(rows=n)
     t1 = time.perf_counter()
     with _LOCK:
         rec = STATS["plans"].get(entry.digest)

@@ -11,11 +11,14 @@ string kernels, fused arithmetic).
 """
 from __future__ import annotations
 
+import contextvars
+import time
 from typing import Dict, List
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import TensorFrame, col, if_else, lit
 from repro.core.expr import DateLit, Expr
 from repro.store import Pred as StorePred, Table as StoreTable
@@ -260,11 +263,45 @@ def _lower_substring(e: SFunc) -> Expr:
 # ----------------------------------------------------------------------
 # plan lowering
 # ----------------------------------------------------------------------
+#: EXPLAIN ANALYZE collector (repro.sql.analyze) for the current
+#: execution context; None = plain execution.
+ANALYZE_COLLECTOR: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sql_analyze", default=None
+)
+
+
 def lower_plan(
     node, frames: Dict[str, TensorFrame], _memo=None, scan_cache=None
 ) -> TensorFrame:
+    """Execute ``node`` op-by-op.  With tracing on (``CONFIG.tracing``)
+    every plan node records an ``sql.exec.<Node>`` span; with an
+    EXPLAIN ANALYZE collector active it additionally records per-node
+    wall time, output rows, and bytes (``repro.sql.analyze``)."""
     if _memo is None:
         _memo = {}  # Shared subplan -> TensorFrame (structural key)
+    coll = ANALYZE_COLLECTOR.get()
+    if coll is None and not obs.enabled():
+        return _lower_node(node, frames, _memo, scan_cache)
+    rows_in = None
+    if isinstance(node, Scan):
+        rows_in = getattr(frames.get(node.table), "nrows", None)
+    with obs.span("sql.exec." + type(node).__name__) as sp:
+        t0 = time.perf_counter_ns()
+        out = _lower_node(node, frames, _memo, scan_cache)
+        if coll is not None:
+            coll.block(out)  # settle async dispatch: honest wall time
+        dt = time.perf_counter_ns() - t0
+        rows = getattr(out, "nrows", None)
+        if rows is not None:
+            sp.set(rows=rows)
+        if coll is not None:
+            coll.record(node, dt, out, sp.span_id, rows_in=rows_in)
+    return out
+
+
+def _lower_node(
+    node, frames: Dict[str, TensorFrame], _memo, scan_cache
+) -> TensorFrame:
     if isinstance(node, Shared):
         if node not in _memo:
             _memo[node] = lower_plan(node.child, frames, _memo, scan_cache)

@@ -810,12 +810,10 @@ def _output_name_for(e, outputs, res, rewrite=None) -> str:
 # ----------------------------------------------------------------------
 # explain formatting
 # ----------------------------------------------------------------------
-def format_plan(node, indent: int = 0) -> str:
-    return _format_plan(node, indent, {})
-
-
-def _format_plan(node, indent: int, shared: dict) -> str:
-    pad = "  " * indent
+def node_label(node) -> str:
+    """One-line header for a plan node (no indentation, no children).
+    Shared between ``format_plan`` and the EXPLAIN ANALYZE renderer
+    (``repro.sql.analyze``)."""
     if isinstance(node, Scan):
         cols = ", ".join(node.columns)
         tag = node.table if node.alias == node.table else f"{node.table} {node.alias}"
@@ -824,28 +822,14 @@ def _format_plan(node, indent: int, shared: dict) -> str:
             pushed = " pushed=" + " AND ".join(
                 format_expr(p) for p in node.predicates
             )
-        return f"{pad}Scan {tag} [{cols}]{pushed}"
+        return f"Scan {tag} [{cols}]{pushed}"
     if isinstance(node, Filter):
-        out = (
-            f"{pad}Filter {format_expr(node.pred)}\n"
-            + _format_plan(node.child, indent + 1, shared)
-        )
-        for m in subquery_markers(node.pred):
-            out += (
-                f"\n{pad}  [{m.name}] subquery:\n"
-                + _format_plan(m.plan.v, indent + 2, shared)
-            )
-        return out
+        return f"Filter {format_expr(node.pred)}"
     if isinstance(node, Join):
         on = ", ".join(
             f"{l} = {r}" for l, r in zip(node.left_keys, node.right_keys)
         )
-        return (
-            f"{pad}Join {node.how} on [{on}]\n"
-            + _format_plan(node.left, indent + 1, shared)
-            + "\n"
-            + _format_plan(node.right, indent + 1, shared)
-        )
+        return f"Join {node.how} on [{on}]"
     if isinstance(node, Aggregate):
         keys = ", ".join(
             n if isinstance(e, SCol) else f"{n}={format_expr(e)}"
@@ -855,10 +839,7 @@ def _format_plan(node, indent: int, shared: dict) -> str:
             f"{n}={fn.upper()}({format_expr(e) if e is not None else '*'})"
             for n, fn, e in node.aggs
         )
-        return (
-            f"{pad}Aggregate keys=[{keys}] aggs=[{aggs}]\n"
-            + _format_plan(node.child, indent + 1, shared)
-        )
+        return f"Aggregate keys=[{keys}] aggs=[{aggs}]"
     if isinstance(node, Project):
         outs = ", ".join(
             n
@@ -867,20 +848,51 @@ def _format_plan(node, indent: int, shared: dict) -> str:
             else f"{n}={format_expr(e)}"
             for n, e in node.outputs
         )
-        return f"{pad}Project [{outs}]\n" + _format_plan(
-            node.child, indent + 1, shared
-        )
+        return f"Project [{outs}]"
     if isinstance(node, Sort):
         keys = ", ".join(f"{n} {'ASC' if a else 'DESC'}" for n, a in node.keys)
-        return f"{pad}Sort [{keys}]\n" + _format_plan(
-            node.child, indent + 1, shared
-        )
+        return f"Sort [{keys}]"
     if isinstance(node, Limit):
-        return f"{pad}Limit {node.n}\n" + _format_plan(
+        return f"Limit {node.n}"
+    if isinstance(node, Distinct):
+        return "Distinct"
+    if isinstance(node, Shared):
+        return "Shared"
+    if isinstance(node, AttachScalar):
+        return f"AttachScalar {node.name} = scalar of [{node.output}]"
+    raise TypeError(f"unknown plan node {type(node).__name__}")
+
+
+def format_plan(node, indent: int = 0) -> str:
+    return _format_plan(node, indent, {})
+
+
+def _format_plan(node, indent: int, shared: dict) -> str:
+    pad = "  " * indent
+    if isinstance(node, Scan):
+        return pad + node_label(node)
+    if isinstance(node, Filter):
+        out = (
+            f"{pad}{node_label(node)}\n"
+            + _format_plan(node.child, indent + 1, shared)
+        )
+        for m in subquery_markers(node.pred):
+            out += (
+                f"\n{pad}  [{m.name}] subquery:\n"
+                + _format_plan(m.plan.v, indent + 2, shared)
+            )
+        return out
+    if isinstance(node, Join):
+        return (
+            f"{pad}{node_label(node)}\n"
+            + _format_plan(node.left, indent + 1, shared)
+            + "\n"
+            + _format_plan(node.right, indent + 1, shared)
+        )
+    if isinstance(node, (Aggregate, Project, Sort, Limit, Distinct)):
+        return f"{pad}{node_label(node)}\n" + _format_plan(
             node.child, indent + 1, shared
         )
-    if isinstance(node, Distinct):
-        return f"{pad}Distinct\n" + _format_plan(node.child, indent + 1, shared)
     if isinstance(node, Shared):
         sid = shared.get(node)
         if sid is not None:
@@ -892,7 +904,7 @@ def _format_plan(node, indent: int, shared: dict) -> str:
         )
     if isinstance(node, AttachScalar):
         return (
-            f"{pad}AttachScalar {node.name} = scalar of [{node.output}]\n"
+            f"{pad}{node_label(node)}\n"
             + _format_plan(node.child, indent + 1, shared)
             + f"\n{pad}  [{node.name}] subquery:\n"
             + _format_plan(node.sub.v, indent + 2, shared)

@@ -106,40 +106,45 @@ def try_stream_aggregate(
                 )
             )
 
+    from repro import obs
+
     ren = {c: f"{cur.alias}.{c}" for c in cur.columns}
     cs = pipeline.ChunkScan(src, list(cur.columns), preds)
     sagg: Optional[pipeline.StreamAgg] = None
-    for f in cs:
-        f = f.rename(ren)
-        for kind, op in ops:
-            if kind == "filter":
-                f = f.filter(op)
-            else:
-                hb = op
-                if hb.disjoint(f):
-                    # zone-map bounds prove no key matches this chunk
-                    if hb.how == "anti":
-                        continue  # every row survives, unprobed
-                    if hb.how in ("inner", "semi"):
-                        pipeline.STATS["chunks_pruned"] += 1
-                        f = None
-                        break
-                f = hb.apply(f)
-            if f.nrows == 0:
-                f = None
-                break
-        if f is None:
-            continue
-        f, keys, specs = prepare_aggregate_inputs(node, f)
+    with obs.span(
+        "pipeline.stream_agg", table=cur.table, chunks=len(cs)
+    ):
+        for f in cs:
+            f = f.rename(ren)
+            for kind, op in ops:
+                if kind == "filter":
+                    f = f.filter(op)
+                else:
+                    hb = op
+                    if hb.disjoint(f):
+                        # zone-map bounds prove no key matches this chunk
+                        if hb.how == "anti":
+                            continue  # every row survives, unprobed
+                        if hb.how in ("inner", "semi"):
+                            pipeline.STATS["chunks_pruned"] += 1
+                            f = None
+                            break
+                    f = hb.apply(f)
+                if f.nrows == 0:
+                    f = None
+                    break
+            if f is None:
+                continue
+            f, keys, specs = prepare_aggregate_inputs(node, f)
+            if sagg is None:
+                sagg = pipeline.StreamAgg(keys, specs)
+            sagg.add(f)
+        pipeline.STATS["pipelines"] += 1
+        pipeline.sync_spill_stats()
         if sagg is None:
-            sagg = pipeline.StreamAgg(keys, specs)
-        sagg.add(f)
-    pipeline.STATS["pipelines"] += 1
-    pipeline.sync_spill_stats()
-    if sagg is None:
-        pipeline.STATS["fallbacks"] += 1
-        return None  # nothing streamed (empty scan): eager path is cheap
-    out = sagg.finalize()
-    if out is None:
-        pipeline.STATS["fallbacks"] += 1
-    return out
+            pipeline.STATS["fallbacks"] += 1
+            return None  # nothing streamed (empty scan): eager path cheap
+        out = sagg.finalize()
+        if out is None:
+            pipeline.STATS["fallbacks"] += 1
+        return out

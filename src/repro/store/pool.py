@@ -120,9 +120,32 @@ class StringPool:
             self.misses = 0
             self.evictions = 0
 
+    def stats_snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "entries": self._count,
+            }
+
+    def reset_stats(self) -> None:
+        """Zero the counters; interned entries stay (counter isolation
+        must not evict canonical dictionaries other frames hold)."""
+        with self._lock:
+            self.hits = 0
+            self.misses = 0
+            self.evictions = 0
+
 
 #: The process-wide pool every store table interns through.
 POOL = StringPool()
+
+from repro import obs as _obs  # noqa: E402  (jax-free)
+
+_obs.metrics.register_group(
+    "store.pool", POOL.stats_snapshot, POOL.reset_stats
+)
 
 
 def intern_dictionary(dictionary: np.ndarray) -> np.ndarray:

@@ -222,9 +222,15 @@ class SpillManager:
     def touch(self, s: Spillable):
         with self._lock:
             reread = s.spilled
-            s._do_load()
             if reread:
+                from repro import obs
+
+                with obs.span("spill.reread") as sp:
+                    s._do_load()
+                    sp.set(bytes=s.nbytes)
                 self.counters["bytes_reread"] += s.nbytes
+            else:
+                s._do_load()
             if s.id in self._lru:
                 self._lru.move_to_end(s.id)
             self._note_peak()
@@ -247,7 +253,11 @@ class SpillManager:
                 break
             if keep is not None and s.id == keep.id:
                 continue
-            wrote = s._do_spill()
+            from repro import obs
+
+            with obs.span("spill.write") as sp:
+                wrote = s._do_spill()
+                sp.set(bytes=wrote)
             self.counters["bytes_spilled"] += wrote
             self.counters["evictions"] += 1
             total -= s.nbytes
@@ -257,3 +267,9 @@ class SpillManager:
 
 #: process-wide manager (the out-of-core layer's single pool)
 SPILL = SpillManager()
+
+from repro import obs as _obs  # noqa: E402  (jax-free)
+
+_obs.metrics.register_group(
+    "store.spill", lambda: dict(SPILL.counters), SPILL.reset_counters
+)

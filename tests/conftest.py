@@ -12,7 +12,7 @@ import pytest
 
 _X64_PREFIXES = (
     "test_core", "test_tpch", "test_tpcds", "test_sql", "test_dist",
-    "test_store", "test_io", "test_serve",
+    "test_store", "test_io", "test_serve", "test_obs",
 )
 
 
@@ -50,4 +50,21 @@ def _x64_policy(request):
     fname = getattr(path, "name", None) or path.basename
     want = any(str(fname).startswith(p) for p in _X64_PREFIXES)
     jax.config.update("jax_enable_x64", want)
+    yield
+
+
+@pytest.fixture(autouse=True)
+def _obs_metrics_reset():
+    """Zero every registered metrics group (and the span rings) before
+    each test: engine counters are process-wide, so without this a
+    test's assertions would see other tests' increments.  Replaces the
+    per-suite manual ``reset_stats()`` calls — the legacy STATS objects
+    stay usable as aliases because the registry resets through the same
+    underlying objects.  Autouse function fixtures run after session/
+    module fixtures and before non-autouse function fixtures, so data
+    built in shared fixtures never leaks counter state into tests."""
+    from repro import obs
+
+    obs.metrics.reset()
+    obs.clear_trace()
     yield

@@ -34,8 +34,8 @@ QNAMES = sorted(TPCH_SQL, key=lambda s: int(s[1:]))
 
 @pytest.fixture()
 def compiled_mode():
-    """force-compile inside the test, restore defaults after."""
-    plan_compile.reset_stats()
+    """force-compile inside the test, restore defaults after.
+    (Counter reset comes from conftest's autouse obs.metrics fixture.)"""
     plan_compile.clear_cache()
     CONFIG.compiled = "force"
     try:

@@ -37,7 +37,7 @@ def ooc(tmp_path):
     CONFIG.memory_budget_bytes = 1 << 14
     CONFIG.spill_dir = str(tmp_path)
     CONFIG.ooc_merge_every = 2
-    pipeline.reset_stats()
+    # counter reset comes from conftest's autouse obs.metrics fixture
     yield tmp_path
     (
         CONFIG.out_of_core,
