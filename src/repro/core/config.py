@@ -58,6 +58,23 @@ class EngineConfig:
     serve_batch_window_ms: float = 2.0
     serve_shared_scans: bool = True
     serve_coalesce: bool = True
+    # Resilient serving (repro.resilience): default per-request deadline
+    # (None = unbounded; Executor.execute(timeout_s=...) overrides per
+    # call), admission-queue depth bound (None = unbounded) with the
+    # load-shedding policy applied when it fills ('reject-new' fails the
+    # incoming request, 'drop-oldest' sheds the head of the queue), and
+    # a per-session in-flight request cap (None = uncapped).  Shed and
+    # rejected requests resolve with typed QueryErrors and are counted
+    # in serve.STATS.
+    serve_default_timeout_s: Optional[float] = None
+    serve_queue_depth: Optional[int] = None
+    serve_shed_policy: str = "reject-new"
+    serve_session_inflight: Optional[int] = None
+    # Transient-I/O retry budget (repro.resilience.retry): spill/store
+    # reads and writes retry OSError-class failures up to io_retries
+    # times with exponential backoff starting at io_retry_base_s.
+    io_retries: int = 3
+    io_retry_base_s: float = 0.005
     # Out-of-core execution (repro.core.pipeline / repro.sql.stream):
     # 'off' never streams, 'force' streams every supported store-backed
     # aggregate/join pipeline chunk-by-chunk, 'auto' streams when the

@@ -37,6 +37,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 import jax.numpy as jnp
 
+from repro.resilience import checkpoint
+
 from .config import CONFIG
 from .frame import INT, TensorFrame
 from .join import _hstack, _right_name_map
@@ -178,7 +180,16 @@ class ChunkScan:
             t.join()
 
     def __iter__(self):
+        for _, f in self.iter_indexed():
+            yield f
+
+    def iter_indexed(self):
+        """Yield ``(chunk_index, frame)`` — the index lets callers build
+        recompute closures that re-scan exactly this chunk."""
         for i, res in self._results():
+            # deadline/cancel checkpoint: a streamed pipeline can abort
+            # between chunks even when a single chunk's compute can't
+            checkpoint("pipeline.chunk")
             STATS["chunks_streamed"] += 1
             STATS["rows_streamed"] += res.nrows
             f = TensorFrame.from_store(self.table, self.proj, [], result=res)
@@ -192,7 +203,7 @@ class ChunkScan:
                         f.set_stats(
                             name, vmin=int(st.vmin), vmax=int(st.vmax)
                         )
-            yield f
+            yield int(i), f
 
 
 # ----------------------------------------------------------------------
@@ -413,7 +424,9 @@ class StreamAgg:
             (pn, _PARTIAL_MERGE[fn], pn) for pn, fn, _ in self.partials
         ]
         self._pending: List = []  # Spillable partial blocks
+        self._pending_rebuilds: List = []  # parallel recompute closures
         self._merged = None  # Spillable holding the running merge
+        self._merged_rebuild = None
         # keyless accumulators
         self._scalars: Dict[str, object] = {}
         self._scalar_rows = 0
@@ -422,7 +435,11 @@ class StreamAgg:
     def _partial_block(self, part: TensorFrame) -> Dict[str, np.ndarray]:
         return {name: part.column(name) for name in self._order}
 
-    def add(self, f: TensorFrame) -> None:
+    def add(self, f: TensorFrame, rebuild=None) -> None:
+        """Fold one chunk frame in.  ``rebuild`` (optional, zero-arg)
+        re-produces the chunk frame from durable inputs; when given,
+        the spilled partial carries a recompute closure, so a corrupt
+        spill block repairs itself instead of failing the query."""
         if f.nrows == 0:
             return
         from repro.store.spill import SPILL
@@ -432,9 +449,28 @@ class StreamAgg:
             return
         with _obs.detailed_span("pipeline.partial_agg", rows=f.nrows):
             part = f.groupby(self.key_names).agg(self.partials)
-        self._pending.append(SPILL.register(self._partial_block(part)))
+        block_rebuild = None
+        if rebuild is not None:
+            def block_rebuild(_rb=rebuild):
+                p = _rb().groupby(self.key_names).agg(self.partials)
+                return self._partial_block(p), {}
+        self._pending.append(
+            SPILL.register(self._partial_block(part), recompute=block_rebuild)
+        )
+        self._pending_rebuilds.append(block_rebuild)
         if len(self._pending) >= max(2, int(CONFIG.ooc_merge_every)):
             self._merge()
+
+    def _merge_blocks(self, blocks) -> TensorFrame:
+        if len(blocks) == 1:
+            cat = blocks[0]
+        else:
+            cat = {
+                name: np.concatenate([b[name] for b in blocks])
+                for name in self._order
+            }
+        mf = TensorFrame.from_arrays(dict(cat))
+        return mf.groupby(self.key_names).agg(self._merge_specs)
 
     def _merge(self) -> None:
         if not self._pending and self._merged is None:
@@ -442,26 +478,31 @@ class StreamAgg:
         with _obs.span("pipeline.merge_partials") as sp:
             blocks = []
             handles = list(self._pending)
+            rebuilds = list(self._pending_rebuilds)
             if self._merged is not None:
                 handles.append(self._merged)
+                rebuilds.append(self._merged_rebuild)
             sp.set(partials=len(handles))
             for h in handles:
                 data, _ = h.get()
                 blocks.append(data)
                 h.release()
-            if len(blocks) == 1:
-                cat = blocks[0]
-            else:
-                cat = {
-                    name: np.concatenate([b[name] for b in blocks])
-                    for name in self._order
-                }
-            mf = TensorFrame.from_arrays(cat)
-            merged = mf.groupby(self.key_names).agg(self._merge_specs)
+            merged = self._merge_blocks(blocks)
+            merged_rebuild = None
+            if rebuilds and all(rb is not None for rb in rebuilds):
+                # a merged block rebuilds by recomputing every
+                # contributing partial and re-merging
+                def merged_rebuild(_rbs=tuple(rebuilds)):
+                    parts = [rb()[0] for rb in _rbs]
+                    return self._partial_block(self._merge_blocks(parts)), {}
             from repro.store.spill import SPILL
 
-            self._merged = SPILL.register(self._partial_block(merged))
+            self._merged = SPILL.register(
+                self._partial_block(merged), recompute=merged_rebuild
+            )
+            self._merged_rebuild = merged_rebuild
             self._pending = []
+            self._pending_rebuilds = []
             STATS["partial_merges"] += 1
 
     # -- keyless path ---------------------------------------------------

@@ -269,5 +269,6 @@ def load_engine_groups() -> list:
     import repro.sql.compile  # noqa: F401
     import repro.serve.stats  # noqa: F401
     import repro.store  # noqa: F401  (pool + spill)
+    import repro.resilience  # noqa: F401  (faults + retries)
 
     return groups()

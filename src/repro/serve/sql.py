@@ -22,22 +22,53 @@ submitted concurrently land in the same micro-batch and share work:
   parameterized plan shape, so prepared-statement traffic with varying
   literals runs as consecutive zero-retrace compiled-cache hits.
 
+Resilience (ISSUE 10, ``repro.resilience``):
+
+- every failure reaching a caller is a typed ``QueryError`` —
+  ``PlanError`` for parse/plan rejections, ``QueryTimeout`` /
+  ``QueryCancelled`` / ``ResourceExhausted`` for policy, classified
+  ``ExecutionError``/``TransientIOError`` otherwise — counted
+  per-class in ``serve.STATS.snapshot()["errors"]``;
+- ``submit``/``execute`` take ``timeout_s`` (default
+  ``CONFIG.serve_default_timeout_s``); the deadline is enforced at
+  admission dequeue (an expired-in-queue request is shed, not
+  executed) and cooperatively at operator/chunk checkpoints during
+  execution.  ``cancel(request_id)`` — the id rides on the returned
+  future — aborts a queued request immediately and an executing one at
+  its next checkpoint.  Coalesced groups execute under the *loosest*
+  member deadline and only abort when every member is cancelled;
+  members cancelled mid-flight get ``QueryCancelled`` at resolution;
+- per-session in-flight caps (``CONFIG.serve_session_inflight``)
+  reject floods with ``ResourceExhausted`` before they queue.
+
 Results come back through ``concurrent.futures.Future``; ``execute``
 is ``submit().result()``.  ``serve.STATS`` counts what the batcher
 actually did.
 """
 from __future__ import annotations
 
+import itertools
+import threading
 import time
 from concurrent.futures import Future
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 from repro.core.config import CONFIG
+from repro.resilience import (
+    QueryCancelled,
+    QueryTimeout,
+    ResourceExhausted,
+    classify,
+    deadline_scope,
+)
+from repro.resilience.deadline import CancelToken
 
 from .admission import AdmissionQueue
 from .stats import STATS
 
 __all__ = ["Executor", "Prepared", "Session"]
+
+_REQUEST_IDS = itertools.count(1)
 
 
 class _Request:
@@ -50,9 +81,22 @@ class _Request:
         "plan",
         "scan_keys",
         "shape_key",
+        "request_id",
+        "expires_at",
+        "token",
+        "session_key",
+        "_owner",
     )
 
-    def __init__(self, text: str, udfs: Dict, prepared: bool) -> None:
+    def __init__(
+        self,
+        owner: "Executor",
+        text: str,
+        udfs: Dict,
+        prepared: bool,
+        timeout_s: Optional[float],
+        session_key: Optional[int],
+    ) -> None:
         self.text = text
         self.udfs = udfs
         self.prepared = prepared
@@ -61,6 +105,45 @@ class _Request:
         self.plan = None
         self.scan_keys: List[tuple] = []
         self.shape_key = text
+        self.request_id = next(_REQUEST_IDS)
+        self.future.request_id = self.request_id
+        if timeout_s is None:
+            timeout_s = CONFIG.serve_default_timeout_s
+        self.expires_at = (
+            None if timeout_s is None else time.monotonic() + float(timeout_s)
+        )
+        self.token = CancelToken()
+        self.session_key = session_key
+        self._owner = owner
+
+    @property
+    def expired(self) -> bool:
+        return (
+            self.expires_at is not None
+            and time.monotonic() > self.expires_at
+        )
+
+    # bookkeeping hooks (the admission queue calls ``fail`` for sheds)
+    def fail(self, exc, shed_reason: Optional[str] = None) -> None:
+        self._owner._fail(self, exc, shed_reason=shed_reason)
+
+    def finish(self, out) -> None:
+        self._owner._resolve(self, out)
+
+
+class _GroupToken:
+    """Cancel view of a coalesced group: cancelled only when *every*
+    member asked to cancel — one client must not kill a result other
+    members still want."""
+
+    __slots__ = ("_tokens",)
+
+    def __init__(self, tokens: List[CancelToken]) -> None:
+        self._tokens = tokens
+
+    @property
+    def cancelled(self) -> bool:
+        return all(t.cancelled for t in self._tokens)
 
 
 class Prepared:
@@ -78,18 +161,21 @@ class Prepared:
         self.template = template
         self.calls = 0
 
-    def submit(self, **params) -> Future:
+    def submit(self, *, timeout_s: Optional[float] = None, **params) -> Future:
         self.calls += 1
         return self._owner._submit(
-            self.template.format(**params), prepared=True
+            self.template.format(**params),
+            prepared=True,
+            timeout_s=timeout_s,
         )
 
-    def execute(self, **params):
-        return self.submit(**params).result()
+    def execute(self, *, timeout_s: Optional[float] = None, **params):
+        return self.submit(timeout_s=timeout_s, **params).result()
 
 
 class Session:
-    """Per-client view of an executor: shared tables, isolated UDFs."""
+    """Per-client view of an executor: shared tables, isolated UDFs,
+    its own in-flight budget."""
 
     def __init__(self, executor: "Executor") -> None:
         self._executor = executor
@@ -106,14 +192,30 @@ class Session:
         # session registrations shadow executor-level ones
         return {**self._executor._udfs, **self._udfs}
 
-    def _submit(self, text: str, prepared: bool = False) -> Future:
-        return self._executor._enqueue(text, self._active(), prepared)
+    def _submit(
+        self,
+        text: str,
+        prepared: bool = False,
+        timeout_s: Optional[float] = None,
+    ) -> Future:
+        return self._executor._enqueue(
+            text,
+            self._active(),
+            prepared,
+            timeout_s=timeout_s,
+            session_key=id(self),
+        )
 
-    def submit(self, query: str) -> Future:
-        return self._submit(query)
+    def submit(self, query: str, *, timeout_s: Optional[float] = None) -> Future:
+        return self._submit(query, timeout_s=timeout_s)
 
-    def execute(self, query: str):
-        return self._submit(query).result()
+    def execute(self, query: str, *, timeout_s: Optional[float] = None):
+        return self._submit(query, timeout_s=timeout_s).result()
+
+    def cancel(self, request_id: int) -> bool:
+        """Cancel one of this session's in-flight requests (see
+        ``Executor.cancel``)."""
+        return self._executor.cancel(request_id)
 
     def prepare(self, template: str) -> Prepared:
         return Prepared(self, template)
@@ -132,6 +234,9 @@ class Executor:
 
         self._frames = scope_frames(scope)
         self._udfs: Dict[str, object] = {}
+        self._inflight: Dict[int, _Request] = {}
+        self._session_load: Dict[int, int] = {}
+        self._reg_lock = threading.Lock()
         self._queue = AdmissionQueue(self._run_batch, auto_start=auto_start)
 
     # -- scope / registry -----------------------------------------------
@@ -154,18 +259,71 @@ class Executor:
         return Session(self)
 
     # -- submission ------------------------------------------------------
-    def _enqueue(self, text: str, udfs: Dict, prepared: bool) -> Future:
-        req = _Request(text, udfs, prepared)
-        return self._queue.submit(req)
+    def _enqueue(
+        self,
+        text: str,
+        udfs: Dict,
+        prepared: bool,
+        timeout_s: Optional[float] = None,
+        session_key: Optional[int] = None,
+    ) -> Future:
+        cap = CONFIG.serve_session_inflight
+        with self._reg_lock:
+            if (
+                cap is not None
+                and session_key is not None
+                and self._session_load.get(session_key, 0) >= int(cap)
+            ):
+                STATS.bump_shed("session_cap")
+                STATS.bump_error("resource_exhausted")
+                raise ResourceExhausted(
+                    f"session has {cap} requests in flight "
+                    f"(CONFIG.serve_session_inflight)"
+                )
+            req = _Request(self, text, udfs, prepared, timeout_s, session_key)
+            self._inflight[req.request_id] = req
+            if session_key is not None:
+                self._session_load[session_key] = (
+                    self._session_load.get(session_key, 0) + 1
+                )
+        try:
+            return self._queue.submit(req)
+        except Exception:
+            self._unregister(req)
+            raise
 
-    def _submit(self, text: str, prepared: bool = False) -> Future:
-        return self._enqueue(text, dict(self._udfs), prepared)
+    def _submit(
+        self,
+        text: str,
+        prepared: bool = False,
+        timeout_s: Optional[float] = None,
+    ) -> Future:
+        return self._enqueue(
+            text, dict(self._udfs), prepared, timeout_s=timeout_s
+        )
 
-    def submit(self, query: str) -> Future:
-        return self._submit(query)
+    def submit(self, query: str, *, timeout_s: Optional[float] = None) -> Future:
+        return self._submit(query, timeout_s=timeout_s)
 
-    def execute(self, query: str):
-        return self._submit(query).result()
+    def execute(self, query: str, *, timeout_s: Optional[float] = None):
+        return self._submit(query, timeout_s=timeout_s).result()
+
+    def cancel(self, request_id: int) -> bool:
+        """Request cooperative cancellation of an in-flight query.
+
+        A still-queued request is shed with ``QueryCancelled`` before
+        it executes; an executing one aborts at its next checkpoint
+        (unless it shares a coalesced execution with members that did
+        not cancel — then only this member's future gets
+        ``QueryCancelled``).  Returns False when the id is unknown or
+        already resolved.
+        """
+        with self._reg_lock:
+            req = self._inflight.get(request_id)
+        if req is None:
+            return False
+        req.token.cancel()
+        return True
 
     def prepare(self, template: str) -> Prepared:
         return Prepared(self, template)
@@ -183,11 +341,68 @@ class Executor:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    # -- resolution bookkeeping ------------------------------------------
+    def _unregister(self, req: _Request) -> None:
+        with self._reg_lock:
+            self._inflight.pop(req.request_id, None)
+            if req.session_key is not None:
+                n = self._session_load.get(req.session_key, 0) - 1
+                if n > 0:
+                    self._session_load[req.session_key] = n
+                else:
+                    self._session_load.pop(req.session_key, None)
+
+    def _fail(
+        self, req: _Request, exc, shed_reason: Optional[str] = None
+    ) -> None:
+        self._unregister(req)
+        err = classify(exc)
+        STATS.bump_error(err.code)
+        if shed_reason is not None:
+            STATS.bump_shed(shed_reason)
+        if not req.future.done():
+            req.future.set_exception(err)
+
+    def _resolve(self, req: _Request, out) -> None:
+        self._unregister(req)
+        STATS.record_latency(time.perf_counter() - req.t_submit)
+        if not req.future.done():
+            req.future.set_result(out)
+
     # -- batch execution (admission worker thread) -----------------------
+    def _shed_stale(self, batch: List[_Request]) -> List[_Request]:
+        """Admission-dequeue deadline/cancel enforcement: a request
+        whose deadline passed (or that was cancelled) while queued is
+        shed with a typed error, never executed."""
+        live: List[_Request] = []
+        for req in batch:
+            if req.token.cancelled:
+                self._fail(
+                    req,
+                    QueryCancelled("cancelled while queued"),
+                    shed_reason="cancelled",
+                )
+            elif req.expired:
+                waited = time.perf_counter() - req.t_submit
+                self._fail(
+                    req,
+                    QueryTimeout(
+                        f"deadline exceeded after {waited * 1e3:.1f}ms in "
+                        f"admission queue"
+                    ),
+                    shed_reason="deadline",
+                )
+            else:
+                live.append(req)
+        return live
+
     def _run_batch(self, batch: List[_Request]) -> None:
         from repro import obs
         from repro.sql import compile as _compile
 
+        batch = self._shed_stale(batch)
+        if not batch:
+            return
         t_start = time.perf_counter()
         for req in batch:  # queue phase: submit -> batch start
             STATS.record_phase("queue", t_start - req.t_submit)
@@ -234,7 +449,8 @@ class Executor:
         self, groups: List[List[_Request]], frames: Dict
     ) -> List[List[_Request]]:
         """Plan each group's representative; planning failures resolve
-        every member of that group."""
+        every member of that group with a typed (usually ``PlanError``)
+        exception."""
         from repro import sql
         from repro.sql import compile as _compile
         from repro.sql.lower import scan_cache_key
@@ -261,9 +477,9 @@ class Executor:
                 except Exception:
                     req.shape_key = req.text
             except Exception as e:  # parse/plan error -> the caller(s)
-                STATS.bump(errors=len(group))
+                err = classify(e, phase="plan")
                 for member in group:
-                    member.future.set_exception(e)
+                    self._fail(member, err)
                 continue
             finally:
                 STATS.record_phase("plan", time.perf_counter() - t0)
@@ -304,7 +520,10 @@ class Executor:
                         table, list(k[1]), list(k[2]), result=res
                     )
             except Exception:
-                continue  # fall back to per-query scans
+                # graceful degradation: every member falls back to its
+                # own scan — observable, never silent
+                STATS.bump(shared_scan_errors=1)
+                continue
             STATS.bump(
                 shared_scan_groups=1, shared_scan_queries=participants
             )
@@ -322,12 +541,25 @@ class Executor:
                 for r in _compile.STATS["plans"].values()
             )
 
+    @staticmethod
+    def _group_deadline(group: List[_Request]) -> Optional[float]:
+        """The loosest member deadline (None if any member is
+        unbounded): a shared execution must not be aborted by its most
+        impatient member while others still want the result."""
+        expiries = [m.expires_at for m in group]
+        if any(e is None for e in expiries):
+            return None
+        return max(expiries)
+
     def _run_group(
         self, group: List[_Request], frames: Dict, scan_cache: Dict
     ) -> None:
         from repro import obs, sql
         from repro.sql.udf import udf_scope
 
+        group = self._shed_stale(group)
+        if not group:
+            return
         req = group[0]
         cache = (
             scan_cache
@@ -339,12 +571,15 @@ class Executor:
         try:
             with obs.span("serve.execute", queries=len(group)), udf_scope(
                 req.udfs
+            ), deadline_scope(
+                at=self._group_deadline(group),
+                token=_GroupToken([m.token for m in group]),
             ):
                 out = sql.execute_plan(req.plan, frames, scan_cache=cache)
         except Exception as e:
-            STATS.bump(errors=len(group))
+            err = classify(e)
             for member in group:
-                member.future.set_exception(e)
+                self._fail(member, err)
             return
         finally:
             compile_s = max(self._compile_seconds() - c0, 0.0)
@@ -356,10 +591,13 @@ class Executor:
         if req.udfs:
             STATS.bump(udf_queries=1)
         for member in group:
+            if member.token.cancelled:
+                # cancelled mid-flight but the shared execution carried
+                # on for the other members
+                self._fail(
+                    member, QueryCancelled("cancelled during execution")
+                )
+                continue
             if member.prepared:
                 STATS.bump(prepared=1)
             self._resolve(member, out)
-
-    def _resolve(self, req: _Request, out) -> None:
-        STATS.record_latency(time.perf_counter() - req.t_submit)
-        req.future.set_result(out)

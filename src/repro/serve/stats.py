@@ -25,11 +25,13 @@ def _fresh() -> Dict[str, int]:
         "batched_queries": 0,  # queries that shared a batch with >=1 other
         "shared_scan_groups": 0,  # store-scan groups answered by one pass
         "shared_scan_queries": 0,  # queries that rode a shared scan
+        "shared_scan_errors": 0,  # shared passes that fell back per-query
         "plan_cache_hits": 0,  # compiled-plan cache hits during serving
         "coalesced": 0,  # duplicate queries answered by one execution
         "prepared": 0,  # executions through a Prepared statement
         "udf_queries": 0,  # executions under a non-empty UDF registry
-        "errors": 0,  # queries resolved with an exception
+        "shed_requests": 0,  # requests resolved without executing
+        "worker_restarts": 0,  # admission workers found dead + restarted
     }
 
 
@@ -57,6 +59,8 @@ class ServeStats:
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._counts = _fresh()
+        self._errors: Dict[str, int] = {}  # QueryError code -> count
+        self._shed: Dict[str, int] = {}  # shed reason -> count
         self._lat: List[float] = []  # seconds, bounded reservoir
         self._phase: Dict[str, List[float]] = {p: [] for p in PHASES}
 
@@ -64,6 +68,19 @@ class ServeStats:
         with self._lock:
             for k, d in deltas.items():
                 self._counts[k] += d
+
+    def bump_error(self, code: str, n: int = 1) -> None:
+        """Count ``n`` queries resolved with a typed error of ``code``
+        (``repro.resilience.errors`` class tags)."""
+        with self._lock:
+            self._errors[code] = self._errors.get(code, 0) + n
+
+    def bump_shed(self, reason: str, n: int = 1) -> None:
+        """Count ``n`` requests shed without executing (deadline passed
+        in queue, queue overflow, cancel, shutdown)."""
+        with self._lock:
+            self._counts["shed_requests"] += n
+            self._shed[reason] = self._shed.get(reason, 0) + n
 
     @staticmethod
     def _push(lat: List[float], seconds: float) -> None:
@@ -109,6 +126,9 @@ class ServeStats:
     def snapshot(self) -> Dict:
         with self._lock:
             out = dict(self._counts)
+            out["errors"] = dict(self._errors)
+            out["errors_total"] = sum(self._errors.values())
+            out["shed"] = dict(self._shed)
             n = len(self._lat)
         out["latencies_recorded"] = n
         out.update(self.percentiles())
@@ -118,11 +138,15 @@ class ServeStats:
     def reset(self) -> None:
         with self._lock:
             self._counts = _fresh()
+            self._errors = {}
+            self._shed = {}
             self._lat = []
             self._phase = {p: [] for p in PHASES}
 
     def __getitem__(self, key: str) -> int:
         with self._lock:
+            if key == "errors":  # legacy alias: total across classes
+                return sum(self._errors.values())
             return self._counts[key]
 
 

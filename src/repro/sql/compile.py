@@ -116,6 +116,7 @@ def _fresh_stats() -> Dict:
         "evictions": 0,  # LRU capacity evictions
         "compiles": 0,  # successful trace+compile
         "fallbacks": 0,  # unsupported plan -> op-by-op engine
+        "compile_failures": 0,  # unexpected trace/compile crashes
         "skipped_small": 0,  # auto mode: input under compiled_min_rows
         "plans": {},  # digest -> per-plan timing/shape record
     }
@@ -1548,6 +1549,9 @@ def _pad_rows(t, cap: int):
 
 
 def _compile_entry(fpr, pplan, preps, order, kinds, args):
+    from repro.resilience.faults import fault_point
+
+    fault_point("compile")
     slots, _, _ = _param_slots(kinds)
     captured: Dict = {}
 
@@ -1606,6 +1610,17 @@ def _maybe_compile(fpr, pplan, preps, tables, kinds, args):
         with _LOCK:
             _NEGATIVE[fpr] = f"{type(e).__name__}: {e}"
             _TRACE_LOCKS.pop(fpr, None)
+            STATS["fallbacks"] += 1
+        return None
+    except Exception as e:
+        # an *unexpected* trace/compile crash (backend bug, injected
+        # fault) must not poison serving: negative-cache the
+        # fingerprint so the plan permanently dispatches op-by-op, and
+        # release the trace lock so waiters aren't stuck behind it
+        with _LOCK:
+            _NEGATIVE[fpr] = f"compile failure {type(e).__name__}: {e}"
+            _TRACE_LOCKS.pop(fpr, None)
+            STATS["compile_failures"] += 1
             STATS["fallbacks"] += 1
         return None
     with _LOCK:

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.core import TensorFrame, col, if_else, lit
+from repro.resilience import checkpoint as _checkpoint
+from repro.resilience.faults import fault_point as _fault_point
 from repro.core.expr import DateLit, Expr
 from repro.store import Pred as StorePred, Table as StoreTable
 
@@ -279,6 +281,10 @@ def lower_plan(
     wall time, output rows, and bytes (``repro.sql.analyze``)."""
     if _memo is None:
         _memo = {}  # Shared subplan -> TensorFrame (structural key)
+    # operator-granularity resilience hooks: a cancel/deadline fires
+    # between plan nodes, and the chaos suite can crash any operator
+    _checkpoint("sql.exec")
+    _fault_point("exec.operator")
     coll = ANALYZE_COLLECTOR.get()
     if coll is None and not obs.enabled():
         return _lower_node(node, frames, _memo, scan_cache)

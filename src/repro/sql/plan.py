@@ -412,6 +412,11 @@ def _replace_subexpr(e, target, replacement):
 # ----------------------------------------------------------------------
 def build_plan(sel: Select, catalog: Dict[str, List[str]]):
     """Compile a parsed SELECT into the naive logical plan."""
+    from repro.resilience import checkpoint
+    from repro.resilience.faults import fault_point
+
+    checkpoint("sql.plan")
+    fault_point("plan")
     return _Planner(catalog).plan_select(sel, None)
 
 

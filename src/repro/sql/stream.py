@@ -111,10 +111,32 @@ def try_stream_aggregate(
     ren = {c: f"{cur.alias}.{c}" for c in cur.columns}
     cs = pipeline.ChunkScan(src, list(cur.columns), preds)
     sagg: Optional[pipeline.StreamAgg] = None
+
+    def _make_rebuild(idx: int):
+        """Recompute closure for one chunk's aggregate contribution:
+        re-scan the chunk from the durable store and replay the op
+        chain (``disjoint`` is only a fast path, so a plain replay is
+        result-identical).  Carried by the chunk's spilled partial so
+        a corrupt spill block repairs itself (``spill.corrupt_blocks``
+        / ``spill.recomputes``)."""
+
+        def rebuild() -> TensorFrame:
+            from repro import store as _store
+
+            res = _store.scan_chunk(src, cs.proj, cs.phys_preds, int(idx))
+            f = TensorFrame.from_store(
+                src, cs.proj, [], result=res
+            ).rename(ren)
+            for kind, op in ops:
+                f = f.filter(op) if kind == "filter" else op.apply(f)
+            return prepare_aggregate_inputs(node, f)[0]
+
+        return rebuild
+
     with obs.span(
         "pipeline.stream_agg", table=cur.table, chunks=len(cs)
     ):
-        for f in cs:
+        for chunk_idx, f in cs.iter_indexed():
             f = f.rename(ren)
             for kind, op in ops:
                 if kind == "filter":
@@ -138,7 +160,7 @@ def try_stream_aggregate(
             f, keys, specs = prepare_aggregate_inputs(node, f)
             if sagg is None:
                 sagg = pipeline.StreamAgg(keys, specs)
-            sagg.add(f)
+            sagg.add(f, rebuild=_make_rebuild(chunk_idx))
         pipeline.STATS["pipelines"] += 1
         pipeline.sync_spill_stats()
         if sagg is None:

@@ -38,6 +38,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.resilience import faults, retry
+
 from .pool import intern_dictionary
 from .table import (
     Chunk,
@@ -87,6 +89,7 @@ def _unpack_strings(payload: bytes, offs: np.ndarray) -> np.ndarray:
 # ----------------------------------------------------------------------
 def write_store(path: str, table: Table) -> None:
     """Persist a chunked table as a ``.tfb`` v2 directory."""
+    faults.fault_point("store.write")
     os.makedirs(path, exist_ok=True)
     manifest = {
         "magic": MAGIC_V2,
@@ -224,11 +227,21 @@ class _ColumnFile:
         self.path = path
         self._fh = None
 
-    def read(self, offset: int, nbytes: int) -> bytes:
+    def _read_once(self, offset: int, nbytes: int) -> bytes:
+        faults.fault_point("store.read")
         if self._fh is None:
             self._fh = open(self.path, "rb")
         self._fh.seek(offset)
         return self._fh.read(nbytes)
+
+    def read(self, offset: int, nbytes: int) -> bytes:
+        try:
+            return self._read_once(offset, nbytes)
+        except OSError:
+            self._fh = None  # handle may be stale; reopen under retry
+            return retry.call(
+                lambda: self._read_once(offset, nbytes), site="store.read"
+            )
 
     def read_array(self, offset: int, count: int, dtype) -> np.ndarray:
         nbytes = count * np.dtype(dtype).itemsize
@@ -250,8 +263,12 @@ def open_store(path: str, manifest: Optional[dict] = None) -> Table:
     to sniff the magic, e.g. ``core.io``, skip the second JSON parse).
     """
     if manifest is None:
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
+        def _load_manifest():
+            faults.fault_point("store.read")
+            with open(os.path.join(path, "manifest.json")) as f:
+                return json.load(f)
+
+        manifest = retry.call(_load_manifest, site="store.read")
     if manifest.get("magic") != MAGIC_V2:
         raise ValueError(
             f"{path} is not a tfb-v2 store "

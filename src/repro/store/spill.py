@@ -14,6 +14,27 @@ Lifecycle: a spill file belongs to its ``Spillable`` — a
 collected, and the per-process spill root (used when
 ``CONFIG.spill_dir`` is unset) is removed at interpreter exit.
 
+Resilience (ISSUE 10) — spilling is an *optimization*, so its I/O
+failures degrade, never escalate:
+
+- **writes** retry transient OSErrors (``resilience.retry``, budget
+  ``CONFIG.io_retries``); a write that still fails keeps the block
+  resident in memory — the budget overruns, counted in
+  ``write_failures`` / ``retained_bytes`` — and the block is not
+  re-offered for eviction;
+- **reads** retry the same way; a block that comes back corrupt
+  (unreadable, or its schema/row-count no longer matches what was
+  written) is *recomputed* through the closure registered with the
+  block (``register(..., recompute=)``) when one exists — counted in
+  ``corrupt_blocks``/``recomputes`` — and surfaces as a typed
+  ``TransientIOError`` only when it can't be;
+- **deletes** never raise (a vanished spill dir is the desired end
+  state); undeletable leftovers are counted in ``delete_failures``
+  and swept again by the atexit root cleanup.
+
+Fault-injection sites: ``spill.write``, ``spill.read``,
+``spill.delete`` (armed by the chaos suite via ``resilience.faults``).
+
 No jax imports: ``repro.store`` stays a host-side layer (CI-enforced).
 """
 from __future__ import annotations
@@ -26,9 +47,11 @@ import tempfile
 import threading
 import weakref
 from collections import OrderedDict
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
+
+from repro.resilience import TransientIOError, faults, retry
 
 _IDS = itertools.count()
 
@@ -62,7 +85,21 @@ def block_bytes(
 
 
 def _delete_dir(path: str) -> None:
-    shutil.rmtree(path, ignore_errors=True)
+    """Best-effort spill-dir removal: must never raise (it runs from
+    weakref finalizers and GC), but a leftover dir is still counted."""
+    try:
+        faults.fault_point("spill.delete")
+        shutil.rmtree(path)
+    except FileNotFoundError:
+        pass
+    except Exception:
+        try:
+            shutil.rmtree(path, ignore_errors=True)
+        except Exception:
+            pass
+        if os.path.exists(path):
+            with SPILL._lock:
+                SPILL.counters["delete_failures"] += 1
 
 
 class Spillable:
@@ -71,6 +108,8 @@ class Spillable:
     In-memory by default; ``spill()`` persists it as a ``.tfb`` v2
     directory and drops the arrays; ``get()`` re-hydrates on demand.
     The spill directory is deleted when the handle is GC'd.
+    ``recompute`` (optional) rebuilds ``(data, validity)`` from durable
+    inputs when the spill file comes back corrupt.
     """
 
     def __init__(
@@ -78,6 +117,7 @@ class Spillable:
         manager: "SpillManager",
         data: Dict[str, np.ndarray],
         validity: Optional[Dict[str, np.ndarray]] = None,
+        recompute: Optional[Callable[[], Tuple[Dict, Dict]]] = None,
     ):
         self.id = next(_IDS)
         self._manager = manager
@@ -86,6 +126,11 @@ class Spillable:
         self.nbytes = block_bytes(data, validity)
         self._path: Optional[str] = None
         self._finalizer = None
+        self._recompute = recompute
+        self._write_failed = False
+        # written-block identity for corruption checks on re-read
+        self._schema = tuple(sorted(data))
+        self._rows = {k: int(a.shape[0]) for k, a in data.items()}
 
     @property
     def spilled(self) -> bool:
@@ -96,35 +141,48 @@ class Spillable:
         root = self._manager.spill_root()
         return os.path.join(root, f"block-{os.getpid()}-{self.id}.tfb")
 
+    def _write(self, path: str) -> None:
+        from . import format as storefmt
+
+        faults.fault_point("spill.write")
+        n = max((a.shape[0] for a in self._data.values()), default=0)
+        storefmt.write_arrays(
+            path,
+            self._data,
+            chunk_rows=max(1, n),
+            validity=self._validity or None,
+        )
+
     def _do_spill(self) -> int:
         """Write the block out and free the host arrays; returns bytes
         written (0 when a previous spill file is still valid — blocks
-        are immutable, so re-hydrated copies can be dropped free)."""
+        are immutable, so re-hydrated copies can be dropped free).
+
+        A write that fails through the retry budget raises
+        ``TransientIOError`` with the block left resident (the caller
+        counts it and stops offering the block for eviction)."""
         if self._data is None:
             return 0
         wrote = 0
         if self._path is None:
-            from . import format as storefmt
-
             path = self._spill_path()
-            n = max((a.shape[0] for a in self._data.values()), default=0)
-            storefmt.write_arrays(
-                path,
-                self._data,
-                chunk_rows=max(1, n),
-                validity=self._validity or None,
-            )
+            try:
+                retry.call(
+                    lambda: self._write(path), site="spill.write"
+                )
+            except Exception:
+                _delete_dir(path)  # never leave a half-written block
+                raise
             self._path = path
             self._finalizer = weakref.finalize(self, _delete_dir, path)
             wrote = self.nbytes
         self._data = None
         return wrote
 
-    def _do_load(self) -> None:
-        if self._data is not None:
-            return
+    def _read(self) -> Tuple[Dict, Dict]:
         from . import format as storefmt
 
+        faults.fault_point("spill.read")
         table = storefmt.open_store(self._path)
         data: Dict[str, np.ndarray] = {}
         validity: Dict[str, np.ndarray] = {}
@@ -142,8 +200,49 @@ class Spillable:
             v = col.validity()
             if v is not None:
                 validity[name] = v
-        self._data = data
-        self._validity = validity
+        if tuple(sorted(data)) != self._schema or any(
+            int(data[k].shape[0]) != self._rows[k] for k in self._schema
+        ):
+            raise TransientIOError(
+                f"corrupt spill block at {self._path}: schema/row-count "
+                f"mismatch against what was written"
+            )
+        return data, validity
+
+    def _do_load(self) -> None:
+        """Re-hydrate from the spill file, recovering a corrupt or
+        unreadable block through its recompute closure when one was
+        registered (counted by the caller via the returned flag)."""
+        if self._data is not None:
+            return
+        try:
+            # corrupt-content mismatch (TransientIOError from _read) is
+            # NOT retried: re-reading the same bad file cannot fix it
+            data, validity = retry.call(
+                self._read, site="spill.read", retry_on=(OSError, EOFError)
+            )
+        except Exception as e:
+            with self._manager._lock:
+                self._manager.counters["corrupt_blocks"] += 1
+            if self._recompute is None:
+                if isinstance(e, TransientIOError):
+                    raise
+                raise TransientIOError(
+                    f"unreadable spill block at {self._path}"
+                ) from e
+            data, validity = self._recompute()
+            validity = dict(validity or {})
+            with self._manager._lock:
+                self._manager.counters["recomputes"] += 1
+            # the on-disk copy is bad: drop it so the next eviction
+            # rewrites instead of re-reading garbage
+            _delete_dir(self._path)
+            self._path = None
+            if self._finalizer is not None:
+                self._finalizer.detach()
+                self._finalizer = None
+        self._data = dict(data)
+        self._validity = dict(validity)
 
     # -- public --------------------------------------------------------
     def get(self) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
@@ -172,6 +271,11 @@ class SpillManager:
             "bytes_reread": 0,
             "evictions": 0,
             "peak_tracked_bytes": 0,
+            "write_failures": 0,  # spill writes that exhausted retries
+            "retained_bytes": 0,  # bytes kept resident past the budget
+            "corrupt_blocks": 0,  # spill files unreadable/mismatched
+            "recomputes": 0,  # corrupt blocks rebuilt from source
+            "delete_failures": 0,  # spill dirs that would not delete
         }
 
     # -- config --------------------------------------------------------
@@ -207,8 +311,9 @@ class SpillManager:
         self,
         data: Dict[str, np.ndarray],
         validity: Optional[Dict[str, np.ndarray]] = None,
+        recompute: Optional[Callable[[], Tuple[Dict, Dict]]] = None,
     ) -> Spillable:
-        s = Spillable(self, data, validity)
+        s = Spillable(self, data, validity, recompute=recompute)
         with self._lock:
             self._lru[s.id] = s
             self._note_peak()
@@ -253,10 +358,21 @@ class SpillManager:
                 break
             if keep is not None and s.id == keep.id:
                 continue
+            if s._write_failed:
+                continue  # already retained in memory; don't re-fail
             from repro import obs
 
             with obs.span("spill.write") as sp:
-                wrote = s._do_spill()
+                try:
+                    wrote = s._do_spill()
+                except (OSError, TransientIOError):
+                    # graceful degradation: keep the block resident and
+                    # overrun the budget rather than lose the data
+                    s._write_failed = True
+                    self.counters["write_failures"] += 1
+                    self.counters["retained_bytes"] += s.nbytes
+                    sp.set(bytes=0, failed=1)
+                    continue
                 sp.set(bytes=wrote)
             self.counters["bytes_spilled"] += wrote
             self.counters["evictions"] += 1

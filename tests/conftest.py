@@ -13,6 +13,7 @@ import pytest
 _X64_PREFIXES = (
     "test_core", "test_tpch", "test_tpcds", "test_sql", "test_dist",
     "test_store", "test_io", "test_serve", "test_obs",
+    "test_resilience", "test_chaos",
 )
 
 

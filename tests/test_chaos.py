@@ -1,0 +1,301 @@
+"""Chaos suite (ISSUE 10): fault storms against the full serving stack.
+
+The property under test: with faults injected at every I/O and compile
+boundary, every query submitted to the engine terminates — with the
+*exact clean-run answer* or a *typed QueryError* — never a hang, never
+a silently wrong result.
+
+``REPRO_CHAOS_SEED`` (CI matrix: 7 and 1234) seeds every fault rule
+and the per-thread query generators, so a failing storm replays
+exactly.  A ``faulthandler`` watchdog aborts the whole process with
+thread dumps if any test exceeds its budget — a hang is a loud CI
+failure, not a timeout mystery.
+
+Fault storm composition (rates chosen so most queries survive but
+every degradation tier fires across the suite):
+
+- ``spill.write`` OSError at 0.3 under a tiny memory budget with
+  ``out_of_core='force'`` — exercises retry then in-memory retention;
+- ``compile`` RuntimeError at 1.0 under ``compiled='force'`` —
+  exercises the negative cache + op-by-op dispatch fallback;
+- ``store.read`` OSError at a low rate — mostly absorbed by retry,
+  residue surfaces as typed ``TransientIOError``;
+- ``exec.operator`` delays + per-query deadlines — exercises
+  checkpoint timeouts under load.
+"""
+import faulthandler
+import os
+import random
+import threading
+
+import numpy as np
+import pytest
+
+from repro import resilience, serve, sql, store
+from repro.core.config import CONFIG
+from repro.resilience import QueryError, faults
+from repro.serve.stats import STATS
+
+CHAOS_SEED = int(os.environ.get("REPRO_CHAOS_SEED", "7"))
+STRESS = os.environ.get("REPRO_SERVE_STRESS") == "1"
+THREADS = 8
+QUERIES_PER_THREAD = 8 if STRESS else 4
+
+#: Per-test hang budget (seconds).  Generous — the point is catching
+#: *forever*, not slowness; the watchdog dumps every thread and exits.
+WATCHDOG_S = int(os.environ.get("REPRO_CHAOS_WATCHDOG_S", "300"))
+
+
+@pytest.fixture(autouse=True)
+def _watchdog():
+    faulthandler.dump_traceback_later(WATCHDOG_S, exit=True)
+    yield
+    faulthandler.cancel_dump_traceback_later()
+
+
+@pytest.fixture(autouse=True)
+def _clean_slate():
+    STATS.reset()
+    faults.clear()
+    yield
+    faults.clear()
+
+
+#: ``t`` is store-backed (streams out-of-core: spill + store.read
+#: faults apply); ``m`` is an in-memory TensorFrame (the whole-plan
+#: compiled path: compile faults apply — compilation requires
+#: TensorFrame scans, so the two fault families need both table kinds).
+_QUERIES = [
+    "SELECT g, SUM(v) AS s, COUNT(*) AS c FROM t WHERE f > {q} GROUP BY g",
+    "SELECT SUM(v * f) AS sv FROM t WHERE g < {g}",
+    "SELECT g, MIN(v) AS lo, MAX(v) AS hi FROM t GROUP BY g",
+    "SELECT COUNT(*) AS c FROM t WHERE f > {q} AND g >= {g}",
+    "SELECT g, SUM(v) AS s FROM m WHERE f > {q} GROUP BY g",
+    "SELECT COUNT(*) AS c FROM m WHERE g >= {g}",
+]
+
+
+def _draw(rng) -> str:
+    t = rng.randrange(len(_QUERIES))
+    return _QUERIES[t].format(q=rng.randrange(2, 9), g=rng.randrange(1, 7))
+
+
+def _arrays(n: int):
+    rng = np.random.default_rng(99)
+    return {
+        "g": rng.integers(0, 8, n),
+        "f": rng.integers(0, 10, n),
+        "v": np.round(rng.standard_normal(n) * 100).astype(np.int64),
+    }
+
+
+@pytest.fixture(scope="module")
+def chaos_store():
+    return store.Table.from_arrays(_arrays(20_000), chunk_rows=1024)
+
+
+@pytest.fixture(scope="module")
+def chaos_frame():
+    from repro.core.frame import TensorFrame
+
+    return TensorFrame.from_arrays(_arrays(4_000))
+
+
+def _assert_same(out, ref) -> None:
+    assert list(out.columns) == list(ref.columns)
+    for name in ref.columns:
+        a, b = np.asarray(out.column(name)), np.asarray(ref.column(name))
+        if a.dtype.kind == "f" or b.dtype.kind == "f":
+            np.testing.assert_allclose(a, b, rtol=1e-9)
+        else:
+            np.testing.assert_array_equal(a, b)
+
+
+def _chaos_config():
+    """(apply, restore) closures for the chaos engine configuration."""
+    saved = (
+        CONFIG.out_of_core,
+        CONFIG.ooc_min_rows,
+        CONFIG.memory_budget_bytes,
+        CONFIG.compiled,
+        CONFIG.io_retry_base_s,
+        CONFIG.serve_shared_scans,
+    )
+
+    def apply():
+        # auto + a floor of 1 row: store scans stream out-of-core while
+        # TensorFrame scans stay eligible for the compiled path (which
+        # out_of_core='force' would bypass entirely)
+        CONFIG.out_of_core = "auto"
+        CONFIG.ooc_min_rows = 1
+        CONFIG.memory_budget_bytes = 1  # every partial must spill
+        CONFIG.compiled = "force"  # force compile-path traffic
+        CONFIG.io_retry_base_s = 1e-4
+        # shared scans pre-materialize store tables, which (by design)
+        # bypasses out-of-core streaming — off, so the storm's store
+        # aggregates actually hit the spill path
+        CONFIG.serve_shared_scans = False
+
+    def restore():
+        (
+            CONFIG.out_of_core,
+            CONFIG.ooc_min_rows,
+            CONFIG.memory_budget_bytes,
+            CONFIG.compiled,
+            CONFIG.io_retry_base_s,
+            CONFIG.serve_shared_scans,
+        ) = saved
+        from repro.sql import compile as plan_compile
+
+        plan_compile.clear_cache()
+
+    return apply, restore
+
+
+def test_chaos_storm_correct_or_typed(chaos_store, chaos_frame):
+    """8 threads, randomized queries, every boundary faulted: each
+    future resolves to the clean answer or a typed QueryError."""
+    scope = {"t": chaos_store, "m": chaos_frame}
+    rng = random.Random(CHAOS_SEED)
+    texts = sorted({_draw(rng) for _ in range(32)})
+    assert any(" m " in q for q in texts)  # both table kinds covered
+    clean = {q: sql.execute(q, scope) for q in texts}  # before any faults
+
+    apply, restore = _chaos_config()
+    apply()
+    outcomes: list = []
+    lock = threading.Lock()
+    try:
+        with serve.Executor(scope) as ex, faults.inject(
+            "spill.write", OSError, rate=0.3, seed=CHAOS_SEED
+        ), faults.inject(
+            "compile", RuntimeError, rate=1.0, seed=CHAOS_SEED + 1
+        ), faults.inject(
+            "store.read", OSError, rate=0.02, seed=CHAOS_SEED + 2
+        ):
+            sessions = [ex.session() for _ in range(THREADS)]
+
+            def work(i):
+                r = random.Random(CHAOS_SEED * 1000 + i)
+                # deterministic slice first (every text runs under
+                # chaos at least once), then randomized re-draws
+                mine = list(texts[i::THREADS]) + [
+                    texts[r.randrange(len(texts))]
+                    for _ in range(QUERIES_PER_THREAD)
+                ]
+                got = []
+                for q in mine:
+                    try:
+                        got.append((q, sessions[i].execute(q), None))
+                    except QueryError as e:
+                        got.append((q, None, e))
+                with lock:
+                    outcomes.extend(got)
+
+            threads = [
+                threading.Thread(target=work, args=(i,))
+                for i in range(THREADS)
+            ]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=WATCHDOG_S)
+                assert not t.is_alive(), "chaos worker hung"
+    finally:
+        restore()
+
+    assert len(outcomes) == len(texts) + THREADS * QUERIES_PER_THREAD
+    errs: dict = {}
+    for q, out, err in outcomes:
+        if err is not None:
+            errs[type(err).__name__] = errs.get(type(err).__name__, 0) + 1
+            continue
+        _assert_same(out, clean[q])  # any result must be the clean one
+    # the storm actually exercised the fault paths
+    hit = faults.sites_hit()
+    assert hit.get("compile", 0) >= 1
+    assert hit.get("spill.write", 0) >= 1
+    # degraded-mode bookkeeping matched what happened
+    snap = STATS.snapshot()
+    assert snap["admitted"] == len(outcomes)
+    assert snap["errors_total"] == sum(errs.values())
+    # compile crashes fell back through the negative cache, and any
+    # spill write failures retained their blocks rather than failing
+    from repro.sql import compile as plan_compile
+
+    assert plan_compile.STATS["compile_failures"] >= 1
+    assert plan_compile.STATS["compiles"] == 0
+
+
+def test_chaos_with_deadlines(chaos_store):
+    """Deadline pressure on top of delay faults: timeouts surface as
+    QueryTimeout, survivors still match the clean answers."""
+    scope = {"t": chaos_store}
+    q_fast = "SELECT g, COUNT(*) AS c FROM t GROUP BY g"
+    clean = sql.execute(q_fast, scope)
+
+    timeouts = 0
+    ok = 0
+    with serve.Executor(scope) as ex, faults.inject(
+        "exec.operator", delay_s=0.02, rate=0.5, seed=CHAOS_SEED
+    ):
+        for i in range(12):
+            try:
+                out = ex.execute(
+                    q_fast, timeout_s=0.04 if i % 2 else None
+                )
+                _assert_same(out, clean)
+                ok += 1
+            except resilience.QueryTimeout:
+                timeouts += 1
+    assert ok >= 1  # unbounded requests always complete
+    assert ok + timeouts == 12
+    snap = STATS.snapshot()
+    assert snap["errors_total"] == timeouts
+    if timeouts:
+        assert snap["errors"] == {"timeout": timeouts}
+
+
+def test_chaos_spill_storm_exact_aggregates(chaos_store):
+    """Out-of-core aggregation under a spill-write fault storm: the
+    budget overruns (retention) but the aggregate stays exact."""
+    scope = {"t": chaos_store}
+    q = "SELECT g, SUM(v) AS s, COUNT(*) AS c FROM t GROUP BY g"
+    clean = sql.execute(q, scope)
+
+    apply, restore = _chaos_config()
+    apply()
+    CONFIG.compiled = "off"  # isolate the spill path
+    try:
+        with faults.inject(
+            "spill.write", OSError, rate=0.5, seed=CHAOS_SEED
+        ):
+            for _ in range(3):
+                _assert_same(sql.execute(q, scope), clean)
+    finally:
+        restore()
+    assert faults.sites_hit().get("spill.write", 0) >= 1
+
+
+def test_chaos_worker_never_wedges(chaos_store):
+    """Back-to-back fault storms against one executor: the admission
+    worker survives every round and still answers cleanly at the end."""
+    scope = {"t": chaos_store}
+    q = "SELECT COUNT(*) AS c FROM t"
+    clean = int(np.asarray(sql.execute(q, scope).column("c"))[0])
+    with serve.Executor(scope) as ex:
+        for round_seed in range(CHAOS_SEED, CHAOS_SEED + 3):
+            with faults.inject(
+                "exec.operator", OSError, rate=0.5, seed=round_seed
+            ):
+                for _ in range(6):
+                    try:
+                        ex.execute(q)
+                    except QueryError:
+                        pass
+        # all rules disarmed: the same executor must be fully healthy
+        for _ in range(3):
+            assert (
+                int(np.asarray(ex.execute(q).column("c"))[0]) == clean
+            )
+    assert STATS["worker_restarts"] == 0  # faults never killed the loop

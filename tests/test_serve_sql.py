@@ -19,7 +19,7 @@ from concurrent.futures import ThreadPoolExecutor
 import numpy as np
 import pytest
 
-from repro import serve, sql, store
+from repro import resilience, serve, sql, store
 from repro.core import oracle as orc
 from repro.core.config import CONFIG
 from repro.core.frame import TensorFrame
@@ -86,17 +86,18 @@ def test_executor_scope_update(small_store):
 
 def test_executor_bad_query_raises(small_store):
     with serve.Executor({"t": small_store}) as ex:
-        with pytest.raises(sql.SqlError):
+        with pytest.raises(resilience.PlanError):
             ex.execute("SELECT nope FROM t")
         # the worker must survive a failed query
         assert ex.execute("SELECT COUNT(*) AS c FROM t").nrows == 1
     assert STATS["errors"] == 1
+    assert STATS.snapshot()["errors"] == {"plan_error": 1}
 
 
 def test_closed_executor_rejects(small_store):
     ex = serve.Executor({"t": small_store})
     ex.close()
-    with pytest.raises(RuntimeError):
+    with pytest.raises(resilience.QueryCancelled):
         ex.submit("SELECT COUNT(*) AS c FROM t")
 
 
@@ -137,7 +138,7 @@ def test_udf_session_isolation(small_store):
         assert float(np.asarray(o1.column("s"))[0]) == pytest.approx(2 * b)
         assert float(np.asarray(o2.column("s"))[0]) == pytest.approx(3 * b)
         # neither session leaked into the executor scope
-        with pytest.raises(sql.SqlError):
+        with pytest.raises(resilience.PlanError):
             ex.execute("SELECT SUM(boost(v)) AS s FROM t")
 
 
@@ -392,7 +393,7 @@ def test_concurrent_sessions_match_serial(lineitem_store):
         _assert_same(out, serial[q])
     snap = STATS.snapshot()
     assert snap["admitted"] == len(texts)
-    assert snap["errors"] == 0
+    assert snap["errors_total"] == 0
     # concurrency actually produced multi-query batches
     assert snap["batches"] < snap["admitted"]
     assert snap["batched_queries"] >= 2
